@@ -1,0 +1,47 @@
+"""Framework bench: per-arch reduced-config train & decode step wall time."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as Cm
+from repro import configs
+from repro.models import decode as D
+from repro.models import steps as S
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def run(quick: bool = False):
+    rows = []
+    archs = ["qwen3-0.6b", "rwkv6-3b", "qwen2-moe-a2.7b"] if quick \
+        else list(configs.REGISTRY)
+    for arch in archs:
+        cfg = configs.get_config(arch).reduced()
+        params = T.init_model(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                                  cfg.vocab)
+        batch = {"tokens": toks,
+                 "labels": jnp.roll(toks, -1, 1).at[:, -1].set(-1)}
+        if cfg.family == "vlm":
+            batch["extra_embeds"] = jnp.zeros((2, 8, cfg.d_model), cfg.cdt)
+            batch["labels"] = jnp.concatenate(
+                [jnp.full((2, 8), -1, jnp.int32), batch["labels"]], 1)
+        elif cfg.family == "encdec":
+            batch["extra_embeds"] = jnp.zeros((2, cfg.encoder_seq,
+                                               cfg.d_model), cfg.cdt)
+        ocfg = adamw.AdamWConfig()
+        step = jax.jit(S.make_train_step(cfg, ocfg))
+        opt = adamw.init(params, ocfg)
+        t_train = Cm.timeit(lambda: step(params, opt, batch))
+        rows.append((f"arch_step/{arch}/train", t_train * 1e6,
+                     f"toks_per_s={2 * 64 / t_train:.0f}"))
+
+        cache = D.init_cache(cfg, 2, 64)
+        serve = jax.jit(S.make_serve_step(cfg))
+        tok = toks[:, :1]
+        t_dec = Cm.timeit(lambda: serve(params, tok, cache, jnp.int32(0)))
+        rows.append((f"arch_step/{arch}/decode", t_dec * 1e6,
+                     f"toks_per_s={2 / t_dec:.0f}"))
+    return rows

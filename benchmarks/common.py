@@ -1,0 +1,110 @@
+"""Timing + decoder-variant helpers shared by the benchmark tables."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api
+from repro.core.huffman import decode as hd
+from repro.core.huffman import encode as he
+from repro.core.huffman import tuning
+from repro.core.huffman.bits import SUBSEQ_BITS
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall time (s) of jit'd fn; blocks on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def luts(book):
+    return jnp.asarray(book.dec_sym), jnp.asarray(book.dec_len)
+
+
+# ---------------------------------------------------------------------------
+# The five decoder variants of paper Table V
+# ---------------------------------------------------------------------------
+
+
+def decode_baseline_cusz(compressed, chunk_symbols: int = 16384):
+    """cuSZ naive coarse-grained decoder (per-chunk sequential)."""
+    book = compressed.codebook
+    ds, dl = luts(book)
+    syms = np.asarray(
+        hd.decode_sequential(jnp.asarray(compressed.stream.units), ds, dl,
+                             n_symbols=compressed.n_symbols,
+                             max_len=book.max_len))
+    ch = he.encode_chunked(syms, book.enc_code, book.enc_len,
+                           chunk_symbols=chunk_symbols)
+
+    def run():
+        return hd.decode_chunked(ch["units"], ch["chunk_bits"],
+                                 ch["chunk_syms"], ds, dl,
+                                 max_len=book.max_len,
+                                 chunk_symbols=chunk_symbols)
+
+    return run, ch["stored_bytes"]
+
+
+def make_variant(compressed, variant: str):
+    """variant in {ori_selfsync, opt_selfsync, ori_gap, opt_gap, tuned_gap}.
+
+    "ori_*"  = padded per-subsequence writes + gather compaction (the
+               original decoders' uncoalesced-write cost structure) and, for
+               self-sync, worst-case fixed sync rounds;
+    "opt_*"  = VMEM-staged output tiles (paper Alg. 1) + early-exit sync.
+    """
+    c = compressed
+    book = c.codebook
+    ds, dl = luts(book)
+    n = c.n_symbols
+    stream = c.stream
+
+    if variant == "ori_selfsync":
+        def run():
+            return hd.decode_selfsync(stream, ds, dl, book.max_len, n,
+                                      use_tiles=False, early_exit=False)
+    elif variant == "opt_selfsync":
+        def run():
+            return hd.decode_selfsync(stream, ds, dl, book.max_len, n,
+                                      use_tiles=True, early_exit=True)
+    elif variant == "ori_gap":
+        def run():
+            return hd.decode_gap_array(stream, ds, dl, book.max_len, n,
+                                       use_tiles=False)
+    elif variant == "opt_gap":
+        def run():
+            return hd.decode_gap_array(stream, ds, dl, book.max_len, n,
+                                       use_tiles=True)
+    elif variant == "tuned_gap":
+        starts = hd.gap_starts(stream)
+        nss = stream.gaps.shape[0]
+        bnds = jnp.arange(nss, dtype=jnp.int32) * SUBSEQ_BITS
+        _, counts = hd.subseq_scan(jnp.asarray(stream.units), ds, dl, starts,
+                                   bnds + SUBSEQ_BITS, stream.total_bits,
+                                   book.max_len)
+
+        def run():
+            return tuning.decode_tuned(stream, ds, dl, book.max_len, n,
+                                       starts, counts)
+    else:
+        raise ValueError(variant)
+    return run
+
+
+def gbps(nbytes: int, seconds: float) -> float:
+    return nbytes / max(seconds, 1e-12) / 1e9
+
+
+def compress_ds(x, eb=1e-3):
+    return api.compress(x, eb=eb, mode="rel")

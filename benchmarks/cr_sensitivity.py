@@ -1,0 +1,30 @@
+"""Paper Fig. 2: decoder throughput vs error bound (compressibility).
+
+Larger eb => higher compression ratio => more symbols per stream byte; the
+paper shows naive fine-grained decoders collapsing there while the
+staged-write versions hold."""
+
+from __future__ import annotations
+
+from benchmarks import common as Cm
+from benchmarks import datasets as DS
+from benchmarks import tpu_model as TM
+
+EBS = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2]
+
+
+def run(n: int = DS.DEFAULT_N, quick: bool = False):
+    rows = []
+    x, _ = DS.make_dataset("HACC", n)
+    ebs = EBS[::2] if quick else EBS
+    for eb in ebs:
+        c = Cm.compress_ds(x, eb=eb)
+        qb = c.quant_code_bytes
+        for v in ("ori_gap", "opt_gap", "ori_selfsync", "opt_selfsync"):
+            fn = Cm.make_variant(c, v)
+            t = Cm.timeit(fn)
+            rows.append((f"fig2/HACC/eb={eb:g}/{v}", t * 1e6,
+                         f"cpu_GBps={Cm.gbps(qb, t):.3f};"
+                         f"tpu_GBps={TM.variant_gbps(c, v):.1f};"
+                         f"ratio={c.ratio:.2f}"))
+    return rows

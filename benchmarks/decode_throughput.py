@@ -1,0 +1,40 @@
+"""Paper Table V: decoding throughput of the five methods x 8 datasets.
+
+CPU wall-clock of the jit'd jnp pipelines (the Pallas kernels execute the
+same phases; interpret mode is not timeable).  GB/s is relative to the
+quantization-code bytes (2 B/code), exactly as the paper computes it.
+Derived column: speedup over the cuSZ baseline decoder.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common as Cm
+from benchmarks import datasets as DS
+from benchmarks import tpu_model as TM
+
+VARIANTS = ["ori_selfsync", "opt_selfsync", "ori_gap", "opt_gap", "tuned_gap"]
+
+
+def run(n: int = DS.DEFAULT_N, quick: bool = False):
+    rows = []
+    names = list(DS.PAPER_RATIOS)[:3] if quick else list(DS.PAPER_RATIOS)
+    for name in names:
+        x, ratio = DS.make_dataset(name, n)
+        c = Cm.compress_ds(x)
+        qbytes = c.quant_code_bytes
+
+        base_fn, _ = Cm.decode_baseline_cusz(c)
+        t_base = Cm.timeit(base_fn)
+        tpu_base = TM.variant_gbps(c, "baseline_cusz")
+        rows.append((f"tableV/{name}/baseline_cusz", t_base * 1e6,
+                     f"cpu_GBps={Cm.gbps(qbytes, t_base):.3f};"
+                     f"tpu_GBps={tpu_base:.1f};tpu_speedup=1.00"))
+        for v in VARIANTS:
+            fn = Cm.make_variant(c, v)
+            t = Cm.timeit(fn)
+            tg = TM.variant_gbps(c, v)
+            rows.append((f"tableV/{name}/{v}", t * 1e6,
+                         f"cpu_GBps={Cm.gbps(qbytes, t):.3f};"
+                         f"tpu_GBps={tg:.1f};"
+                         f"tpu_speedup={tg / tpu_base:.2f}"))
+    return rows

@@ -1,0 +1,70 @@
+"""Paper Table II: per-phase breakdown of the optimized decoders.
+
+Phases: intra-seq sync / inter-seq sync / get-output-idx / tune / decode+write
+(throughput per phase, GB/s of quantization codes)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks import common as Cm
+from benchmarks import datasets as DS
+from repro.core.huffman import decode as hd
+from repro.core.huffman import tuning
+from repro.core.huffman.bits import SUBSEQ_BITS
+
+
+def run(n: int = DS.DEFAULT_N, quick: bool = False):
+    rows = []
+    names = ["HACC", "Nyx"] if quick else list(DS.PAPER_RATIOS)
+    for name in names:
+        x, _ = DS.make_dataset(name, n)
+        c = Cm.compress_ds(x)
+        book = c.codebook
+        ds, dl = Cm.luts(book)
+        stream = c.stream
+        units = jnp.asarray(stream.units)
+        nss = stream.gaps.shape[0]
+        qb = c.quant_code_bytes
+        bnds = jnp.arange(nss, dtype=jnp.int32) * SUBSEQ_BITS
+
+        # self-sync phases
+        t_intra = Cm.timeit(
+            lambda: hd.selfsync_intra(units, ds, dl, stream.total_bits, nss,
+                                      book.max_len, stream.subseqs_per_seq))
+        start, _ = hd.selfsync_intra(units, ds, dl, stream.total_bits, nss,
+                                     book.max_len, stream.subseqs_per_seq)
+        t_inter = Cm.timeit(
+            lambda: hd.selfsync_inter(units, ds, dl, start,
+                                      stream.total_bits, book.max_len,
+                                      stream.subseqs_per_seq))
+        # counts / output idx (shared by gap path = its phase 1)
+        t_idx = Cm.timeit(
+            lambda: hd.subseq_scan(units, ds, dl, bnds + stream.gaps.astype(
+                jnp.int32), bnds + SUBSEQ_BITS, stream.total_bits,
+                book.max_len))
+        _, counts = hd.subseq_scan(units, ds, dl,
+                                   bnds + stream.gaps.astype(jnp.int32),
+                                   bnds + SUBSEQ_BITS, stream.total_bits,
+                                   book.max_len)
+        offsets = hd.output_offsets(counts)
+        ss_max = 4096 // ((SUBSEQ_BITS - book.max_len) // book.max_len + 1) + 2
+        t_dw = Cm.timeit(
+            lambda: hd.decode_write_tiles(
+                units, ds, dl, bnds + stream.gaps.astype(jnp.int32),
+                bnds + SUBSEQ_BITS, offsets, stream.total_bits, book.max_len,
+                c.n_symbols, 4096, ss_max))
+        # tuning overhead (classify/hist/sort/plan)
+        t_tune = Cm.timeit(
+            lambda: tuning.sort_by_class(tuning.classify(
+                tuning.sequence_ratios(stream.seq_counts,
+                                       stream.subseqs_per_seq))))
+
+        for phase, t in [("intra_seq_sync", t_intra),
+                         ("inter_seq_sync", t_inter),
+                         ("get_output_idx", t_idx),
+                         ("tune_shared_mem", t_tune),
+                         ("decode_and_write", t_dw)]:
+            rows.append((f"tableII/{name}/{phase}", t * 1e6,
+                         f"GBps={Cm.gbps(qb, t):.3f}"))
+    return rows

@@ -1,0 +1,40 @@
+"""Paper Fig. 4: end-to-end cuSZ decompression (Huffman decode + inverse
+Lorenzo), baseline vs optimized decoders.  GB/s relative to the original
+dataset bytes, as in the paper."""
+
+from __future__ import annotations
+
+from benchmarks import common as Cm
+from benchmarks import datasets as DS
+from repro.core import api
+
+
+def run(n: int = DS.DEFAULT_N, quick: bool = False):
+    rows = []
+    names = list(DS.PAPER_RATIOS)[:3] if quick else list(DS.PAPER_RATIOS)
+    for name in names:
+        x, _ = DS.make_dataset(name, n)
+        c = Cm.compress_ds(x)
+        orig = c.original_bytes
+
+        base_fn, _ = Cm.decode_baseline_cusz(c)
+        import jax.numpy as jnp
+        from repro.core.sz import lorenzo
+
+        def e2e_base():
+            codes = base_fn().reshape(-1)[: c.n_symbols]
+            return lorenzo.dequantize(codes.reshape(c.shape), c.outlier_pos,
+                                      c.outlier_val, c.eb, c.shape)
+
+        t_base = Cm.timeit(e2e_base)
+        rows.append((f"fig4/{name}/baseline", t_base * 1e6,
+                     f"GBps={Cm.gbps(orig, t_base):.3f};speedup=1.00"))
+        for method in ("selfsync", "gap"):
+            def e2e(method=method):
+                return api.decompress(c, method=method)
+
+            t = Cm.timeit(e2e)
+            rows.append((f"fig4/{name}/opt_{method}", t * 1e6,
+                         f"GBps={Cm.gbps(orig, t):.3f};"
+                         f"speedup={t_base / t:.2f}"))
+    return rows

@@ -1,0 +1,40 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.jsonl")
+
+
+def load(path: str = RESULTS, multi_pod: bool = False):
+    cells = {}
+    try:
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("ok") and r.get("multi_pod") == multi_pod:
+                    cells[(r["arch"], r["shape"])] = r
+    except FileNotFoundError:
+        pass
+    return cells
+
+
+def run(quick: bool = False):
+    rows = []
+    cells = load()
+    for (arch, shape), r in sorted(cells.items()):
+        rl = r["roofline"]
+        c = r["cost"]
+        rows.append((
+            f"roofline/{arch}/{shape}",
+            rl["bound_step_s"] * 1e6,
+            f"t_c={rl['t_compute_s']:.4f};t_m={rl['t_memory_s']:.4f};"
+            f"t_l={rl['t_collective_s']:.4f};dom={rl['dominant']};"
+            f"model_over_hlo={c.get('model_over_hlo', 0):.3f};"
+            f"peak_gib={r['mem']['peak_per_device_gib']}"))
+    if not rows:
+        rows.append(("roofline/missing", 0.0,
+                     "run python -m repro.launch.dryrun --all first"))
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness entry point -- one table per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  All timings are CPU wall-clock of
+the jit'd reference pipelines (this container has no TPU; the Pallas kernels
+run the same phases and are validated in interpret mode by tests/).
+TPU-target numbers are derived analytically in EXPERIMENTS.md §Roofline from
+the dry-run artifacts (see benchmarks/roofline.py).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only tableV,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of datasets / sizes (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: tableI,tableII,tableIV,tableV,"
+                         "fig2,fig4,arch,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (arch_step, compression_ratio, cr_sensitivity,
+                            decode_throughput, decoder_phases,
+                            e2e_decompression, roofline, shmem_tuning)
+
+    suites = [
+        ("tableV", decode_throughput.run),
+        ("tableII", decoder_phases.run),
+        ("tableIV", compression_ratio.run),
+        ("tableI", shmem_tuning.run),
+        ("fig2", cr_sensitivity.run),
+        ("fig4", e2e_decompression.run),
+        ("arch", arch_step.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    for key, fn in suites:
+        if only and key not in only:
+            continue
+        try:
+            if key in ("arch", "roofline"):
+                rows = fn(quick=args.quick)
+            else:
+                rows = fn(quick=args.quick)
+        except Exception as e:  # keep the harness robust: report and go on
+            print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Paper Table I + Fig. 3: tuned buffer size vs brute-force sweep.
+
+The tunable is the decode-write tile size (the VMEM staging buffer).  For
+each dataset we brute-force tile sizes 1024..8192 (step 512, as in the
+paper) and compare the online tuner's per-class dispatch, including its own
+overhead.  Derived: best/worst brute-force GB/s, tuned GB/s, % differences.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks import common as Cm
+from benchmarks import datasets as DS
+from repro.core.huffman import decode as hd
+from repro.core.huffman import tuning
+from repro.core.huffman.bits import SUBSEQ_BITS
+
+SIZES = list(range(1024, 8193, 512))
+
+
+def run(n: int = DS.DEFAULT_N, quick: bool = False):
+    rows = []
+    names = ["HACC", "EXAALT"] if quick else list(DS.PAPER_RATIOS)
+    sizes = SIZES[::4] if quick else SIZES
+    for name in names:
+        x, _ = DS.make_dataset(name, n)
+        c = Cm.compress_ds(x)
+        book = c.codebook
+        ds, dl = Cm.luts(book)
+        stream = c.stream
+        units = jnp.asarray(stream.units)
+        nss = stream.gaps.shape[0]
+        bnds = jnp.arange(nss, dtype=jnp.int32) * SUBSEQ_BITS
+        starts = bnds + stream.gaps.astype(jnp.int32)
+        _, counts = hd.subseq_scan(units, ds, dl, starts, bnds + SUBSEQ_BITS,
+                                   stream.total_bits, book.max_len)
+        offsets = hd.output_offsets(counts)
+        qb = c.quant_code_bytes
+
+        per_size = {}
+        for tile in sizes:
+            ss_max = tile // ((SUBSEQ_BITS - book.max_len)
+                              // book.max_len + 1) + 2
+            t = Cm.timeit(lambda tile=tile, ss=ss_max: hd.decode_write_tiles(
+                units, ds, dl, starts, bnds + SUBSEQ_BITS, offsets,
+                stream.total_bits, book.max_len, c.n_symbols, tile, ss))
+            per_size[tile] = t
+        best = min(per_size, key=per_size.get)
+        worst = max(per_size, key=per_size.get)
+
+        t_tuned = Cm.timeit(lambda: tuning.decode_tuned(
+            stream, ds, dl, book.max_len, c.n_symbols, starts, counts))
+        t_plan = Cm.timeit(lambda: tuning.sort_by_class(tuning.classify(
+            tuning.sequence_ratios(stream.seq_counts,
+                                   stream.subseqs_per_seq))))
+
+        g_best = Cm.gbps(qb, per_size[best])
+        g_worst = Cm.gbps(qb, per_size[worst])
+        g_tuned = Cm.gbps(qb, t_tuned + t_plan)
+        rows.append((f"tableI/{name}/best_bruteforce", per_size[best] * 1e6,
+                     f"GBps={g_best:.3f};tile={best}"))
+        rows.append((f"tableI/{name}/worst_bruteforce", per_size[worst] * 1e6,
+                     f"GBps={g_worst:.3f};tile={worst}"))
+        rows.append((f"tableI/{name}/tuned_with_overhead",
+                     (t_tuned + t_plan) * 1e6,
+                     f"GBps={g_tuned:.3f};"
+                     f"vs_best_pct={100 * (g_best - g_tuned) / g_best:.1f};"
+                     f"vs_worst_pct={100 * (g_tuned - g_worst) / max(g_worst, 1e-9):.1f}"))
+    return rows

@@ -1,0 +1,61 @@
+"""Error-bounded compressed checkpoints: save a trained model with SZ-
+compressed float shards, restore, verify the bound, keep training.
+
+    PYTHONPATH=src python examples/compressed_checkpoint.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import steps as S
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def main():
+    cfg = configs.get_config("qwen3-0.6b").reduced()
+    ocfg = adamw.AdamWConfig(lr=1e-3)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                  global_batch=4))
+    step = jax.jit(S.make_train_step(cfg, ocfg))
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params, ocfg)
+    for s in range(10):
+        params, opt, m = step(params, opt, data.batch_at(s))
+    print(f"trained 10 steps, loss {float(m['loss']):.3f}")
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, compress_eb=1e-4, compress_min_size=4096)
+        mgr.save(9, params, opt)
+        import os
+        import subprocess
+        size = int(subprocess.check_output(["du", "-sb", d]).split()[0])
+        raw = sum(np.asarray(x).nbytes for x in jax.tree.leaves(params)) + \
+            sum(np.asarray(x).nbytes for x in jax.tree.leaves(opt))
+        print(f"checkpoint {size / 2**20:.1f} MiB vs raw {raw / 2**20:.1f} "
+              f"MiB ({raw / size:.2f}x)")
+        r = mgr.restore()
+        key = lambda kv: jax.tree_util.keystr(kv[0])
+        for (ka, a), (kb, b) in zip(
+                sorted(jax.tree_util.tree_leaves_with_path(params), key=key),
+                sorted(jax.tree_util.tree_leaves_with_path(r["params"]),
+                       key=key)):
+            err = np.abs(np.asarray(a, np.float32)
+                         - np.asarray(b, np.float32)).max()
+            rng_ = float(np.asarray(a, np.float32).max()
+                         - np.asarray(a, np.float32).min())
+            assert err <= max(1e-4 * rng_ * 1.02, 1e-7), (ka, err)
+        print("restore within error bound: OK")
+        p2, o2 = r["params"], r["opt"]
+        for s in range(10, 13):
+            p2, o2, m = step(p2, o2, data.batch_at(s))
+        print(f"continued training, loss {float(m['loss']):.3f}: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Gradient compression over an explicit data-parallel mesh.
+
+    PYTHONPATH=src python examples/grad_compression_dp.py
+
+Runs a tiny model replicated over an 8-way (forced CPU) data mesh and syncs
+gradients with the bf16-reduce-scatter + int8-all-gather wire format with
+error feedback (runtime/collectives.py).  Compares the loss trajectory with
+exact fp32 sync and reports the wire-byte saving.
+
+NOTE: must run as its own process (device count is locked at first jax use):
+the script re-execs itself with XLA_FLAGS when needed.
+"""
+
+import os
+import sys
+
+if "--inner" not in sys.argv:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8 " \
+        + os.environ.get("XLA_FLAGS", "")
+    os.execv(sys.executable, [sys.executable, __file__, "--inner"])
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.launch.mesh import make_host_mesh  # noqa: E402
+from repro.runtime import collectives as C  # noqa: E402
+
+
+def main():
+    mesh = make_host_mesh(data=8)
+    n_shards = 8
+    dim = 512
+
+    key = jax.random.PRNGKey(0)
+    w_true = jax.random.normal(key, (dim,))
+
+    def local_loss(w, x, y):
+        return jnp.mean((x @ w - y) ** 2)
+
+    sync, init_res = C.make_dp_gradient_sync(mesh, eb=1e-6)
+
+    def data_for(shard, step):
+        k = jax.random.fold_in(jax.random.PRNGKey(7 * shard + 1), step)
+        x = jax.random.normal(k, (64, dim))
+        y = x @ w_true + 0.01 * jax.random.normal(k, (64,))
+        return x, y
+
+    for scheme in ("exact_f32", "compressed"):
+        w = jnp.zeros((dim,))
+        res = init_res({"w": jnp.zeros((n_shards, dim))})
+        losses = []
+        for step in range(60):
+            gs, ls = [], []
+            for s in range(n_shards):
+                x, y = data_for(s, step)
+                ls.append(float(local_loss(w, x, y)))
+                gs.append(jax.grad(local_loss)(w, x, y))
+            g_stack = jnp.stack(gs)
+            if scheme == "exact_f32":
+                g = g_stack.mean(0)
+            else:
+                out, res = sync({"w": g_stack}, res)
+                g = out["w"][0]
+            w = w - 0.05 * g
+            losses.append(sum(ls) / n_shards)
+        print(f"{scheme:12s}: loss {losses[0]:.4f} -> {losses[-1]:.6f}")
+
+    n = dim
+    print(f"wire bytes/param/step: fp32 all-reduce="
+          f"{C.wire_bytes(n, 'allreduce_f32') / n:.1f}  "
+          f"compressed={C.wire_bytes(n, 'rs_bf16_ag_int8') / n:.1f}  "
+          f"({C.wire_bytes(n, 'allreduce_f32') / C.wire_bytes(n, 'rs_bf16_ag_int8'):.2f}x less traffic)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: compress a scientific field, decompress it three ways.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import api
+from repro.data.pipeline import smooth_field
+
+
+def main():
+    # A Lorenzo-predictable "simulation snapshot" (see benchmarks/datasets.py
+    # for surrogates calibrated to the paper's eight datasets).
+    x = smooth_field((512, 512), seed=0)
+    print(f"input: {x.shape} float32, {x.nbytes / 2**20:.1f} MiB")
+
+    c = api.compress(x, eb=1e-3, mode="rel")
+    print(f"compressed: {c.compressed_bytes / 2**20:.2f} MiB "
+          f"(ratio {c.ratio:.2f}x, eb {c.eb:.3e})")
+
+    for method in ("gap", "selfsync", "naive_ref"):
+        xh = np.asarray(api.decompress(c, method=method))
+        err = np.abs(xh - x).max()
+        print(f"decompress[{method:10s}]: max err {err:.3e} "
+              f"(bound {c.eb_effective:.3e}) "
+          f"{'OK' if err <= c.eb_effective else 'VIOLATION'}")
+
+    # kernel path (Pallas, interpret mode on CPU)
+    xh = np.asarray(api.decompress(c, method="gap", use_kernels=True))
+    print(f"decompress[pallas-gap]: max err {np.abs(xh - x).max():.3e}")
+
+
+if __name__ == "__main__":
+    main()

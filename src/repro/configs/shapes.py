@@ -1,0 +1,26 @@
+"""Assigned input-shape set (identical for every LM arch; 4 cells each).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of seq_len), NOT ``train_step``.  ``long_500k`` requires sub-quadratic
+attention -- skipped for pure full-attention archs (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}

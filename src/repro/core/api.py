@@ -1,0 +1,24 @@
+"""Public compression API used by the framework features.
+
+Three consumers (see DESIGN.md §2):
+  * checkpoint/manager.py  -- compressed checkpoint shards
+  * models/kvcache.py      -- compressed KV-cache blocks
+  * optim/grad_compress.py -- gradient compression (uses quantize only;
+                              entropy stage is storage-side)
+"""
+
+from __future__ import annotations
+
+from repro.core.sz.compressor import (  # noqa: F401  (public re-exports)
+    Compressed,
+    compress,
+    decompress,
+)
+from repro.core.sz import lorenzo  # noqa: F401
+
+
+def roundtrip_error(x, c: "Compressed", xhat) -> float:
+    """Max abs error of a round trip (must be <= c.eb)."""
+    import numpy as np
+
+    return float(np.max(np.abs(np.asarray(x) - np.asarray(xhat))))

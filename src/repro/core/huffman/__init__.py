@@ -1,0 +1,3 @@
+from repro.core.huffman import bits, codebook, decode, encode  # noqa: F401
+from repro.core.huffman.codebook import Codebook, build_codebook  # noqa: F401
+from repro.core.huffman.encode import EncodedStream  # noqa: F401

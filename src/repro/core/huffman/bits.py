@@ -1,0 +1,32 @@
+"""Bit-level primitives shared by the jnp reference decoders and the Pallas
+kernel bodies (the kernel bodies call these on *values*, never on refs)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.huffman.encode import SUBSEQ_BITS, UNIT_BITS  # re-export
+
+__all__ = ["peek", "SUBSEQ_BITS", "UNIT_BITS"]
+
+
+def peek(units: jnp.ndarray, pos: jnp.ndarray, max_len: int) -> jnp.ndarray:
+    """Read ``max_len`` bits at absolute bit position(s) ``pos``.
+
+    ``units`` is uint32[U] (MSB-first packing); ``pos`` is int32[...].
+    Returns int32[...] in [0, 2**max_len) -- an index into the decode LUT.
+
+    Positions may point up to the final bit; we clip unit gathers so a peek
+    whose *window* overruns the stream reads zero-padding (the encoder always
+    pads the tail with zero bits, and decode loops mask on ``total_bits``).
+    """
+    pos = pos.astype(jnp.int32)
+    u = pos >> 5
+    sh = (pos & 31).astype(jnp.uint32)
+    n = units.shape[0]
+    w0 = units[jnp.clip(u, 0, n - 1)]
+    w1 = jnp.where(u + 1 < n, units[jnp.clip(u + 1, 0, n - 1)], jnp.uint32(0))
+    hi = w0 << sh
+    lo = jnp.where(sh == 0, jnp.uint32(0), w1 >> (jnp.uint32(32) - sh))
+    window = hi | lo
+    return (window >> jnp.uint32(32 - max_len)).astype(jnp.int32)

@@ -1,0 +1,191 @@
+"""Canonical, length-limited Huffman codebooks.
+
+cuSZ builds its codebook on the GPU (Tian et al. 2021); codebook construction
+is O(K log K) for K symbols (K = 1024 quantization bins by default) and is a
+negligible fraction of (de)coding time, so we build it host-side in numpy and
+ship the resulting lookup tables to the device as plain arrays.
+
+Design decisions (see DESIGN.md §9):
+  * Codes are *canonical*: sorted by (length, symbol), assigned sequentially.
+    Canonical codes admit compact decode tables and make encode/decode
+    round-trips reproducible bit-for-bit.
+  * Codes are *length-limited* to ``max_len`` (default 12) via the
+    package-merge algorithm [Larmore & Hirschberg 1990].  A hard length cap
+    lets the decoder use a flat ``2**max_len``-entry LUT that fits in VMEM
+    (4096 x (uint16 sym + uint8 len) = 12 KiB) alongside the staging buffer,
+    replacing the paper's reliance on the GPU L1/L2 caching the codebook.
+  * A 128-bit subsequence therefore contains at least
+    ``floor((SUBSEQ_BITS - max_len) / max_len) + 1 >= 9`` codeword starts,
+    which upper-bounds the number of subsequences overlapping an output tile
+    -- the static bound the Pallas decode kernels rely on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+DEFAULT_MAX_LEN = 12
+
+
+@dataclasses.dataclass(frozen=True)
+class Codebook:
+    """Encode + decode tables for one canonical Huffman code."""
+
+    n_symbols: int
+    max_len: int
+    # Encoder tables, indexed by symbol.
+    enc_code: np.ndarray  # uint32[K]  codeword bits, right-aligned
+    enc_len: np.ndarray   # uint8[K]   codeword length; 0 => symbol unused
+    # Decoder tables, indexed by the next ``max_len`` bits of the stream.
+    dec_sym: np.ndarray   # uint16[2**max_len]
+    dec_len: np.ndarray   # uint8[2**max_len]
+
+    @property
+    def min_len(self) -> int:
+        used = self.enc_len[self.enc_len > 0]
+        return int(used.min()) if used.size else 0
+
+    def min_starts_per_subseq(self, subseq_bits: int) -> int:
+        """Lower bound on codeword *starts* inside a ``subseq_bits`` window.
+
+        Every codeword is at most ``max_len`` bits, so between two
+        consecutive starts there are at most ``max_len`` bits.
+        """
+        return (subseq_bits - self.max_len) // self.max_len + 1
+
+
+def code_lengths_package_merge(freq: np.ndarray, max_len: int) -> np.ndarray:
+    """Optimal length-limited code lengths via package-merge.
+
+    Args:
+      freq: int64[K] symbol frequencies (zeros allowed -> unused symbols).
+      max_len: maximum codeword length L; requires 2**L >= #nonzero symbols.
+
+    Returns:
+      uint8[K] code lengths (0 for unused symbols).
+    """
+    freq = np.asarray(freq, dtype=np.int64)
+    k = freq.shape[0]
+    sym = np.nonzero(freq > 0)[0]
+    n = sym.size
+    lengths = np.zeros(k, dtype=np.uint8)
+    if n == 0:
+        return lengths
+    if n == 1:
+        lengths[sym[0]] = 1
+        return lengths
+    if (1 << max_len) < n:
+        raise ValueError(f"max_len={max_len} cannot code {n} symbols")
+
+    # Leaf items sorted by weight.  Each item carries a per-symbol count
+    # vector implicitly: we track, for every package, the multiset of leaves
+    # it contains via index lists (n is small -- <= 2**16 -- so this is fine).
+    order = np.argsort(freq[sym], kind="stable")
+    leaves_w = freq[sym][order]            # ascending weights
+    leaves_id = np.arange(n)[order]        # position in `sym`
+
+    # packages: list of (weight, leaf_count_vector) built level by level.
+    counts = np.zeros(n, dtype=np.int64)
+
+    prev_w: list[int] = []
+    prev_c: list[np.ndarray] = []
+    for _level in range(max_len):
+        # Merge leaves with packaged pairs from the previous level.
+        cur_w: list[int] = []
+        cur_c: list[np.ndarray] = []
+        li, pi = 0, 0
+        while li < n or pi < len(prev_w):
+            take_leaf = pi >= len(prev_w) or (
+                li < n and leaves_w[li] <= prev_w[pi]
+            )
+            if take_leaf:
+                vec = np.zeros(n, dtype=np.int64)
+                vec[leaves_id[li]] = 1
+                cur_w.append(int(leaves_w[li]))
+                cur_c.append(vec)
+                li += 1
+            else:
+                cur_w.append(prev_w[pi])
+                cur_c.append(prev_c[pi])
+                pi += 1
+        # Package adjacent pairs for the next level.
+        nxt_w, nxt_c = [], []
+        for i in range(0, len(cur_w) - 1, 2):
+            nxt_w.append(cur_w[i] + cur_w[i + 1])
+            nxt_c.append(cur_c[i] + cur_c[i + 1])
+        prev_w, prev_c = nxt_w, nxt_c
+        last_w, last_c = cur_w, cur_c
+
+    # The optimal length-L code corresponds to the first 2n-2 items of the
+    # final (unpackaged) list; a symbol's code length is the number of
+    # selected items containing it.
+    for i in range(2 * n - 2):
+        counts += last_c[i]
+    lengths[sym] = counts.astype(np.uint8)
+    return lengths
+
+
+def canonical_codes(lengths: np.ndarray) -> np.ndarray:
+    """Assign canonical codewords given code lengths.
+
+    Symbols are ranked by (length, symbol index); codes count upward, shifted
+    left at each length increase (RFC1951-style).
+    """
+    lengths = np.asarray(lengths)
+    k = lengths.shape[0]
+    codes = np.zeros(k, dtype=np.uint32)
+    used = np.nonzero(lengths > 0)[0]
+    if used.size == 0:
+        return codes
+    order = sorted(used, key=lambda s: (lengths[s], s))
+    code = 0
+    prev_len = int(lengths[order[0]])
+    for s in order:
+        length = int(lengths[s])
+        code <<= length - prev_len
+        codes[s] = code
+        code += 1
+        prev_len = length
+    return codes
+
+
+def build_decode_lut(
+    codes: np.ndarray, lengths: np.ndarray, max_len: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Flat decode LUT: index by the next ``max_len`` stream bits."""
+    size = 1 << max_len
+    dec_sym = np.zeros(size, dtype=np.uint16)
+    dec_len = np.zeros(size, dtype=np.uint8)
+    for s in np.nonzero(lengths > 0)[0]:
+        length = int(lengths[s])
+        lo = int(codes[s]) << (max_len - length)
+        hi = lo + (1 << (max_len - length))
+        dec_sym[lo:hi] = s
+        dec_len[lo:hi] = length
+    return dec_sym, dec_len
+
+
+def build_codebook(freq: np.ndarray, max_len: int = DEFAULT_MAX_LEN) -> Codebook:
+    """End-to-end: frequencies -> canonical length-limited codebook."""
+    freq = np.asarray(freq, dtype=np.int64)
+    lengths = code_lengths_package_merge(freq, max_len)
+    codes = canonical_codes(lengths)
+    dec_sym, dec_len = build_decode_lut(codes, lengths, max_len)
+    return Codebook(
+        n_symbols=int(freq.shape[0]),
+        max_len=max_len,
+        enc_code=codes,
+        enc_len=lengths,
+        dec_sym=dec_sym,
+        dec_len=dec_len,
+    )
+
+
+def expected_bits_per_symbol(freq: np.ndarray, lengths: np.ndarray) -> float:
+    freq = np.asarray(freq, dtype=np.float64)
+    total = freq.sum()
+    if total == 0:
+        return 0.0
+    return float((freq * lengths).sum() / total)

@@ -1,0 +1,224 @@
+"""Vectorized Huffman encoder (JAX) with subsequence metadata + gap arrays.
+
+Stream format (DESIGN.md §9):
+  * MSB-first bit packing into 32-bit *units* (the paper's unit).
+  * A *subsequence* is ``SUBSEQ_UNITS = 4`` units = 128 bits -- the work item
+    of one decoder lane.
+  * A *sequence* is ``subseqs_per_seq`` subsequences -- the work item of one
+    decoder grid block.  Codewords cross subsequence and sequence boundaries
+    freely (no alignment padding inside the stream; only the tail is padded).
+
+The encoder emits, alongside the packed units:
+  * ``gaps``  -- uint8[n_subseq]: bit offset (< max_len) of the first codeword
+    *start* at-or-after each subsequence boundary (Yamamoto et al.'s gap
+    array).  Self-synchronization decoding ignores this array.
+  * ``counts`` -- int32[n_subseq]: number of codewords starting inside each
+    subsequence.  This is ground truth used by tests and by the *oracle*
+    decode path; the real decoders recompute counts on device (phase 1 /
+    the sync phase), exactly as in the paper.
+
+Everything here is jit-able; the host wrapper in ``core/sz/compressor.py``
+materializes exact (unpadded) sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SUBSEQ_UNITS = 4
+UNIT_BITS = 32
+SUBSEQ_BITS = SUBSEQ_UNITS * UNIT_BITS  # 128
+DEFAULT_SUBSEQS_PER_SEQ = 32            # 4096-bit sequences
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EncodedStream:
+    """A Huffman-coded bitstream plus decoding metadata (a pytree)."""
+
+    units: jnp.ndarray        # uint32[n_units], padded to a whole sequence
+    gaps: jnp.ndarray         # uint8[n_subseq]
+    counts: jnp.ndarray       # int32[n_subseq] (ground truth / oracle only)
+    seq_counts: jnp.ndarray   # int32[n_seq]    symbols per sequence
+    total_bits: jnp.ndarray   # int32[] valid payload bits
+    n_symbols: jnp.ndarray    # int32[] total symbols encoded
+    subseqs_per_seq: int = dataclasses.field(default=DEFAULT_SUBSEQS_PER_SEQ)
+
+    def tree_flatten(self):
+        children = (self.units, self.gaps, self.counts, self.seq_counts,
+                    self.total_bits, self.n_symbols)
+        return children, self.subseqs_per_seq
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, subseqs_per_seq=aux)
+
+    @property
+    def n_subseq(self) -> int:
+        return self.gaps.shape[0]
+
+    @property
+    def n_seq(self) -> int:
+        return self.gaps.shape[0] // self.subseqs_per_seq
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@partial(jax.jit, static_argnames=("n_units_padded", "subseqs_per_seq"))
+def _encode_padded(
+    symbols: jnp.ndarray,
+    enc_code: jnp.ndarray,
+    enc_len: jnp.ndarray,
+    n_units_padded: int,
+    subseqs_per_seq: int,
+) -> EncodedStream:
+    """Core vectorized encoder; ``n_units_padded`` fixed for jit."""
+    symbols = symbols.astype(jnp.int32)
+    lens = enc_len[symbols].astype(jnp.int32)          # [N]
+    starts = jnp.cumsum(lens) - lens                   # exclusive scan [N]
+    total_bits = (starts[-1] + lens[-1]).astype(jnp.int32)
+
+    n_bits_padded = n_units_padded * UNIT_BITS
+
+    # --- bit materialization -------------------------------------------
+    # For every output bit b: which symbol covers it, and which bit of that
+    # symbol's codeword is it?  searchsorted over the starts array.
+    bit_idx = jnp.arange(n_bits_padded, dtype=jnp.int32)
+    owner = jnp.searchsorted(starts, bit_idx, side="right") - 1  # [B]
+    owner = jnp.clip(owner, 0, symbols.shape[0] - 1)
+    within = bit_idx - starts[owner]
+    code = enc_code[symbols[owner]].astype(jnp.uint32)
+    length = lens[owner]
+    # MSB-first: bit 0 of the codeword is its most significant bit.
+    shift = jnp.maximum(length - 1 - within, 0).astype(jnp.uint32)
+    bits = (code >> shift) & jnp.uint32(1)
+    bits = jnp.where(bit_idx < total_bits, bits, jnp.uint32(0))
+
+    # Pack MSB-first into uint32 units.
+    weights = (jnp.uint32(1) << jnp.arange(31, -1, -1, dtype=jnp.uint32))
+    units = (bits.reshape(-1, UNIT_BITS) * weights[None, :]).sum(
+        axis=1, dtype=jnp.uint32
+    )
+
+    # --- subsequence metadata ------------------------------------------
+    n_subseq = n_units_padded // SUBSEQ_UNITS
+    boundaries = jnp.arange(n_subseq, dtype=jnp.int32) * SUBSEQ_BITS
+    # First codeword start at-or-after each boundary.
+    first = jnp.searchsorted(starts, boundaries, side="left")
+    first_start = jnp.where(
+        first < starts.shape[0], starts[jnp.clip(first, 0, starts.shape[0] - 1)],
+        total_bits,
+    )
+    gaps = jnp.clip(first_start - boundaries, 0, 255).astype(jnp.uint8)
+    # Codeword starts inside each subsequence.
+    ends = jnp.searchsorted(starts, boundaries + SUBSEQ_BITS, side="left")
+    counts = (ends - first).astype(jnp.int32)
+    seq_counts = counts.reshape(-1, subseqs_per_seq).sum(
+        axis=1, dtype=jnp.int32
+    )
+
+    return EncodedStream(
+        units=units,
+        gaps=gaps,
+        counts=counts,
+        seq_counts=seq_counts,
+        total_bits=total_bits,
+        n_symbols=jnp.asarray(symbols.shape[0], jnp.int32),
+        subseqs_per_seq=subseqs_per_seq,
+    )
+
+
+def encode(
+    symbols,
+    enc_code,
+    enc_len,
+    subseqs_per_seq: int = DEFAULT_SUBSEQS_PER_SEQ,
+) -> EncodedStream:
+    """Encode a symbol array.  Host wrapper: sizes the padded stream.
+
+    The padded size is computed from an exact host-side bit count so the
+    jit cache keys on (n_units_padded, subseqs_per_seq) only.
+    """
+    symbols_np = np.asarray(symbols)
+    enc_len_np = np.asarray(enc_len)
+    total_bits = int(enc_len_np[symbols_np].astype(np.int64).sum())
+    n_units = _ceil_to(max(total_bits, 1), UNIT_BITS) // UNIT_BITS
+    n_units_padded = _ceil_to(n_units, SUBSEQ_UNITS * subseqs_per_seq)
+    return _encode_padded(
+        jnp.asarray(symbols_np),
+        jnp.asarray(enc_code),
+        jnp.asarray(enc_len),
+        n_units_padded=n_units_padded,
+        subseqs_per_seq=subseqs_per_seq,
+    )
+
+
+def encode_chunked(
+    symbols,
+    enc_code,
+    enc_len,
+    chunk_symbols: int = 16384,
+) -> dict:
+    """cuSZ-style *coarse-grained* chunked encoding (the paper's baseline).
+
+    Each fixed-size chunk of input symbols is encoded independently and
+    padded to a unit boundary; the decoder runs one sequential thread per
+    chunk.  The per-chunk padding is the compression-ratio cost the paper
+    mentions for small chunks.
+    """
+    symbols = np.asarray(symbols)
+    enc_code = np.asarray(enc_code, dtype=np.uint32)
+    enc_len = np.asarray(enc_len, dtype=np.uint8)
+    n = symbols.shape[0]
+    n_chunks = (n + chunk_symbols - 1) // chunk_symbols
+
+    unit_rows = []
+    chunk_bits = np.zeros(n_chunks, dtype=np.int64)
+    chunk_syms = np.zeros(n_chunks, dtype=np.int32)
+    max_units = 0
+    for c in range(n_chunks):
+        chunk = symbols[c * chunk_symbols : (c + 1) * chunk_symbols]
+        lens = enc_len[chunk].astype(np.int64)
+        starts = np.cumsum(lens) - lens
+        bits_total = int(lens.sum())
+        n_units = max(1, (bits_total + UNIT_BITS - 1) // UNIT_BITS)
+        bit_idx = np.arange(n_units * UNIT_BITS, dtype=np.int64)
+        owner = np.clip(
+            np.searchsorted(starts, bit_idx, side="right") - 1, 0, len(chunk) - 1
+        )
+        within = bit_idx - starts[owner]
+        code = enc_code[chunk[owner]].astype(np.uint64)
+        shift = np.maximum(lens[owner] - 1 - within, 0).astype(np.uint64)
+        bits = ((code >> shift) & np.uint64(1)).astype(np.uint32)
+        bits[bit_idx >= bits_total] = 0
+        weights = (1 << np.arange(31, -1, -1, dtype=np.uint64)).astype(np.uint64)
+        units = (bits.reshape(-1, UNIT_BITS).astype(np.uint64) * weights).sum(
+            axis=1
+        ).astype(np.uint32)
+        unit_rows.append(units)
+        chunk_bits[c] = bits_total
+        chunk_syms[c] = len(chunk)
+        max_units = max(max_units, n_units)
+
+    padded = np.zeros((n_chunks, max_units), dtype=np.uint32)
+    for c, row in enumerate(unit_rows):
+        padded[c, : row.shape[0]] = row
+    return {
+        "units": jnp.asarray(padded),          # [n_chunks, max_units]
+        "chunk_bits": jnp.asarray(chunk_bits),
+        "chunk_syms": jnp.asarray(chunk_syms),
+        "chunk_symbols": chunk_symbols,
+        "n_symbols": n,
+        # stored bytes: real per-chunk unit counts (unit-aligned padding),
+        # matching how cuSZ accounts chunked storage.
+        "stored_bytes": int(
+            sum(((b + UNIT_BITS - 1) // UNIT_BITS) * 4 for b in chunk_bits)
+        ),
+    }

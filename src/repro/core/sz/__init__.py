@@ -1,0 +1,1 @@
+from repro.core.sz.compressor import Compressed, compress, decompress  # noqa: F401

@@ -1,0 +1,170 @@
+"""End-to-end SZ-style compressor: Lorenzo -> quantize -> Huffman.
+
+This is the cuSZ pipeline the paper plugs its decoders into.  The compressor
+is a host-orchestrated object (codebook construction is host-side numpy, see
+``core/huffman/codebook.py``); the heavy encode/decode phases are jit'd jnp
+or Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.huffman import codebook as cb
+from repro.core.huffman import decode as hd
+from repro.core.huffman import encode as he
+from repro.core.sz import lorenzo
+
+DEFAULT_EB = 1e-3
+
+
+@dataclasses.dataclass
+class Compressed:
+    """A compressed tensor (host container; fields are device arrays)."""
+
+    stream: he.EncodedStream
+    codebook: cb.Codebook
+    outlier_pos: jnp.ndarray   # int32[m_pad], -1 padded
+    outlier_val: jnp.ndarray   # int32[m_pad] Lorenzo residuals
+    shape: tuple
+    dtype: np.dtype
+    eb: float
+    radius: int
+    rel_range: float           # value range used for relative error bounds
+    max_abs: float = 0.0       # max |x|, for the effective-bound guarantee
+
+    @property
+    def n_symbols(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def compressed_bytes(self) -> int:
+        """Storage accounting (paper's compression-ratio definition)."""
+        unit_bytes = int(np.ceil(int(self.stream.total_bits) / 8))
+        gap_bytes = self.stream.gaps.shape[0]  # 1 B / subsequence
+        n_out = int((np.asarray(self.outlier_pos) >= 0).sum())
+        outlier_bytes = 8 * n_out
+        codebook_bytes = 2 * (1 << self.codebook.max_len)
+        return unit_bytes + gap_bytes + outlier_bytes + codebook_bytes
+
+    @property
+    def original_bytes(self) -> int:
+        return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+    @property
+    def ratio(self) -> float:
+        return self.original_bytes / max(self.compressed_bytes, 1)
+
+    @property
+    def quant_code_bytes(self) -> int:
+        """Size of the quantization-code array (paper computes decoder GB/s
+        relative to this: 2 bytes per code)."""
+        return 2 * self.n_symbols
+
+    @property
+    def eb_effective(self) -> float:
+        """Guaranteed bound: eb + final-cast rounding (ulp/2 of max |x|).
+
+        The lattice value q is exact (float64 host prequantization); the only
+        further rounding is the f32 product ``q * 2*eb`` at reconstruction.
+        """
+        return self.eb + float(np.spacing(np.float32(self.max_abs + self.eb)))
+
+
+def compress(
+    x,
+    eb: float = DEFAULT_EB,
+    mode: str = "rel",
+    radius: int = lorenzo.DEFAULT_RADIUS,
+    max_len: int = cb.DEFAULT_MAX_LEN,
+    subseqs_per_seq: int = he.DEFAULT_SUBSEQS_PER_SEQ,
+) -> Compressed:
+    """Compress a float tensor with error bound ``eb``.
+
+    mode="rel": bound is ``eb * (max(x) - min(x))`` (the paper's setting,
+    "relative error bound 1e-3"); mode="abs": bound is ``eb`` directly.
+    """
+    x = jnp.asarray(x)
+    if mode == "rel":
+        rng = float(jnp.max(x) - jnp.min(x))
+        rng = rng if rng > 0 else 1.0
+        abs_eb = eb * rng
+    elif mode == "abs":
+        rng = 1.0
+        abs_eb = eb
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    codes_np, outlier, resid = lorenzo.quantize_host(
+        np.asarray(x), abs_eb, radius=radius)
+    codes_np = codes_np.reshape(-1)
+
+    # Outlier side list (exact residuals), padded to a power-of-two length.
+    pos = np.nonzero(np.asarray(outlier).reshape(-1))[0].astype(np.int32)
+    vals = np.asarray(resid).reshape(-1)[pos].astype(np.int32)
+    m_pad = max(8, int(2 ** np.ceil(np.log2(max(len(pos), 1) + 1))))
+    pos_pad = np.full(m_pad, -1, np.int32)
+    val_pad = np.zeros(m_pad, np.int32)
+    pos_pad[: len(pos)] = pos
+    val_pad[: len(pos)] = vals
+
+    # Histogram -> codebook -> encode.
+    freq = np.bincount(codes_np, minlength=2 * radius)
+    book = cb.build_codebook(freq, max_len=max_len)
+    stream = he.encode(codes_np, book.enc_code, book.enc_len,
+                       subseqs_per_seq=subseqs_per_seq)
+
+    return Compressed(
+        stream=stream,
+        codebook=book,
+        outlier_pos=jnp.asarray(pos_pad),
+        outlier_val=jnp.asarray(val_pad),
+        shape=tuple(x.shape),
+        dtype=np.dtype(str(x.dtype)),
+        eb=abs_eb,
+        radius=radius,
+        rel_range=rng,
+        max_abs=float(jnp.max(jnp.abs(x))),
+    )
+
+
+def decompress(
+    c: Compressed,
+    method: str = "gap",
+    tile_syms: int = 4096,
+    use_tiles: bool = True,
+    use_kernels: bool = False,
+) -> jnp.ndarray:
+    """Decompress; ``method`` in {"gap", "selfsync", "naive_ref"}.
+
+    ``use_kernels=True`` routes decode phases through the Pallas kernels
+    (interpret mode on CPU); otherwise the jit'd jnp reference path is used.
+    """
+    book = c.codebook
+    dec_sym = jnp.asarray(book.dec_sym)
+    dec_len = jnp.asarray(book.dec_len)
+    n = c.n_symbols
+
+    if use_kernels:
+        from repro.kernels import ops as kops  # local import: keeps core pure-jnp
+        codes = kops.decode_pipeline(c.stream, dec_sym, dec_len, book.max_len,
+                                     n, method=method, tile_syms=tile_syms)
+    elif method == "gap":
+        codes = hd.decode_gap_array(c.stream, dec_sym, dec_len, book.max_len,
+                                    n, tile_syms=tile_syms, use_tiles=use_tiles)
+    elif method == "selfsync":
+        codes = hd.decode_selfsync(c.stream, dec_sym, dec_len, book.max_len,
+                                   n, tile_syms=tile_syms, use_tiles=use_tiles)
+    elif method == "naive_ref":
+        codes = hd.decode_sequential(jnp.asarray(c.stream.units), dec_sym,
+                                     dec_len, n_symbols=n,
+                                     max_len=book.max_len)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    return lorenzo.dequantize(
+        codes.reshape(c.shape), c.outlier_pos, c.outlier_val, c.eb, c.shape,
+        radius=c.radius, dtype=jnp.dtype(str(c.dtype)))

@@ -1,0 +1,127 @@
+"""Lorenzo prediction + error-bounded quantization (cuSZ's dual-quant).
+
+cuSZ (Tian et al. 2020) breaks SZ's sequential predict-quantize loop with
+*dual quantization*: the input is first rounded onto the uniform lattice
+``2*eb`` (this is where the bounded error is introduced), and the Lorenzo
+predictor then operates on exact lattice integers -- so prediction residuals
+are exact and the whole transform is embarrassingly parallel in both
+directions.  That property is what makes it a good TPU workload, and it is
+the form the Pallas kernels implement.
+
+  compress:    q  = round(x / (2*eb))               (lossy, |x - 2*eb*q| <= eb)
+               d  = q - L(q)                         (Lorenzo residual, exact)
+               code = clip(d + R, 0, 2R-1)           (uint16 bins, radius R)
+               outliers: positions with |d| >= R keep d in a side list
+  decompress:  d  = code - R  (outliers scattered back)
+               q  = inclusive prefix-sum of d along every axis (inverse Lorenzo)
+               x' = 2*eb * q
+
+The N-d Lorenzo predictor is the inclusion-exclusion corner sum, whose exact
+inverse is a chain of per-axis cumulative sums.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_RADIUS = 512  # 1024 quantization bins, cuSZ default
+
+
+def _lorenzo_residual(q: jnp.ndarray) -> jnp.ndarray:
+    """d = q - L(q) via alternating-sign finite differences along each axis."""
+    d = q
+    for axis in range(q.ndim):
+        shifted = jnp.roll(d, 1, axis=axis)
+        # zero boundary (predict 0 outside the domain)
+        idx = [slice(None)] * q.ndim
+        idx[axis] = slice(0, 1)
+        shifted = shifted.at[tuple(idx)].set(0)
+        d = d - shifted
+    return d
+
+
+def _lorenzo_reconstruct(d: jnp.ndarray) -> jnp.ndarray:
+    """Inverse transform: inclusive cumsum along every axis."""
+    q = d
+    for axis in range(d.ndim):
+        q = jnp.cumsum(q, axis=axis)
+    return q
+
+
+@partial(jax.jit, static_argnames=("radius",))
+def quantize(x: jnp.ndarray, eb: float, radius: int = DEFAULT_RADIUS):
+    """Returns (codes uint16, outlier_mask bool, residual int32).
+
+    ``residual`` is the full-precision Lorenzo residual; callers keep only
+    the masked entries as the outlier side list.
+
+    Precision note: this is the in-graph (f32) path used by gradient / KV
+    compression where ``eb`` is far above ulp scale.  When
+    ``|x| / (2*eb) >= 2**23`` the f32 division can misplace lattice cells;
+    the storage path (``compressor.compress``) therefore prequantizes
+    host-side in float64 (:func:`quantize_host`).  Either way the
+    reconstruction costs an extra ~ulp(|x|)/2 from the final f32 product --
+    see ``Compressed.eb_effective``.
+    """
+    eb = jnp.asarray(eb, x.dtype)
+    q = jnp.round(x / (2 * eb)).astype(jnp.int32)
+    d = _lorenzo_residual(q)
+    code = d + radius
+    outlier = (code < 0) | (code >= 2 * radius)
+    codes = jnp.clip(code, 0, 2 * radius - 1).astype(jnp.uint16)
+    # In-range marker for outliers: code 0 is reserved (cuSZ convention);
+    # the decoder overwrites those positions from the side list.
+    codes = jnp.where(outlier, jnp.uint16(0), codes)
+    return codes, outlier, d
+
+
+def quantize_host(x, eb: float, radius: int = DEFAULT_RADIUS):
+    """Float64 host-side prequantization (storage path).
+
+    Returns (codes uint16[np], outlier_mask bool[np], residual int64[np]).
+    Exact for ``|x| / (2*eb) < 2**62``; raises if the lattice index
+    overflows int32 (which the int32 reconstruction path requires).
+    """
+    import numpy as np
+
+    x64 = np.asarray(x, dtype=np.float64)
+    q = np.round(x64 / (2.0 * eb))
+    if np.abs(q).max(initial=0.0) >= 2**31 - 1:
+        raise ValueError(
+            "error bound too small for int32 lattice; increase eb")
+    q = q.astype(np.int64)
+    d = q.copy()
+    for axis in range(q.ndim):
+        shifted = np.roll(d, 1, axis=axis)
+        idx = [slice(None)] * q.ndim
+        idx[axis] = slice(0, 1)
+        shifted[tuple(idx)] = 0
+        d = d - shifted
+    code = d + radius
+    outlier = (code < 0) | (code >= 2 * radius)
+    codes = np.clip(code, 0, 2 * radius - 1).astype(np.uint16)
+    codes[outlier] = 0
+    return codes, outlier, d
+
+
+@partial(jax.jit, static_argnames=("radius", "shape", "dtype"))
+def dequantize(codes: jnp.ndarray, outlier_pos: jnp.ndarray,
+               outlier_val: jnp.ndarray, eb: float, shape: tuple,
+               radius: int = DEFAULT_RADIUS, dtype=jnp.float32):
+    """Inverse of :func:`quantize`.
+
+    ``outlier_pos``/``outlier_val`` are flat positions and int32 residuals
+    (padded with pos = -1 entries, which are dropped).
+    """
+    d = codes.astype(jnp.int32) - radius
+    flat = d.reshape(-1)
+    # Padded entries carry pos == -1; route them out of bounds and drop.
+    safe_pos = jnp.where(outlier_pos >= 0, outlier_pos, flat.shape[0])
+    flat = flat.at[safe_pos].set(outlier_val.astype(jnp.int32), mode="drop")
+    d = flat.reshape(shape)
+    q = _lorenzo_reconstruct(d)
+    eb = jnp.asarray(eb, dtype)
+    return (q.astype(dtype) * (2 * eb)).astype(dtype)

@@ -1,0 +1,117 @@
+"""Shared in-kernel decode helpers.
+
+These operate on *values* (arrays already loaded from refs), never on refs,
+so the same code runs inside Pallas kernel bodies and in the jnp oracles.
+
+Coordinate system: every decoder lane owns a private row of ``ROW_UNITS``
+uint32 units covering its 128-bit subsequence plus overhang
+(128 + max_len + 31 < 192 bits -> 6 units).  Bit positions are local to the
+row: the subsequence body is [0, 128), decode may run to < 192.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ROW_UNITS = 6           # 192 bits >= 128 (body) + 12 (max codeword) + 31 (align)
+MAX_SYMS = 128          # worst case: 128 one-bit codewords per subsequence
+
+
+def peek_rows(rows: jnp.ndarray, pos: jnp.ndarray, max_len: int) -> jnp.ndarray:
+    """Per-lane peek: rows (L, ROW_UNITS) uint32, pos (L,) local bits.
+
+    Returns (L,) int32 LUT indices (the next ``max_len`` bits of each lane).
+    """
+    lanes = rows.shape[0]
+    r = rows.shape[1]
+    pos = pos.astype(jnp.int32)
+    u = jnp.clip(pos >> 5, 0, r - 1)
+    sh = (pos & 31).astype(jnp.uint32)
+    flat = rows.reshape(-1)
+    base = jnp.arange(lanes, dtype=jnp.int32) * r
+    w0 = flat[base + u]
+    u1 = jnp.clip(u + 1, 0, r - 1)
+    w1 = jnp.where(u + 1 < r, flat[base + u1], jnp.uint32(0))
+    hi = w0 << sh
+    lo = jnp.where(sh == 0, jnp.uint32(0), w1 >> (jnp.uint32(32) - sh))
+    window = hi | lo
+    return (window >> jnp.uint32(32 - max_len)).astype(jnp.int32)
+
+
+def decode_window(rows, start, end, dec_sym, dec_len, max_len: int,
+                  collect: bool):
+    """Masked decode of per-lane windows [start, end) (local bit coords).
+
+    The loop is a ``while_loop`` whose predicate is "any lane still active"
+    -- the TPU analogue of the paper's `__all_sync` early exit.  Returns
+    (landing_pos, counts[, padded_syms (L, MAX_SYMS)]).
+    """
+    lanes = rows.shape[0]
+    start = start.astype(jnp.int32)
+    end = end.astype(jnp.int32)
+    syms0 = jnp.zeros((lanes, MAX_SYMS), jnp.uint16) if collect else None
+
+    def cond(state):
+        pos, count, syms = state
+        return jnp.any(pos < end)
+
+    def body(state):
+        pos, count, syms = state
+        active = pos < end
+        win = peek_rows(rows, pos, max_len)
+        sym = dec_sym[win]
+        length = dec_len[win].astype(jnp.int32)
+        if collect:
+            idx = jnp.clip(count, 0, MAX_SYMS - 1)
+            lane = jnp.arange(lanes)
+            upd = jnp.where(active, sym, syms[lane, idx])
+            syms = syms.at[lane, idx].set(upd)
+        count = jnp.where(active, count + 1, count)
+        pos = jnp.where(active, pos + jnp.maximum(length, 1), pos)
+        return pos, count, syms
+
+    # negative local starts can reach padded tail lanes via the selfsync
+    # landing chain (landing - 128 < 0 when the window was total_bits-
+    # clamped); clamp so such lanes stay inactive.
+    pos0 = jnp.clip(jnp.minimum(start, end), 0, None)
+    pos, count, syms = jax.lax.while_loop(
+        cond, body, (pos0, jnp.zeros(lanes, jnp.int32), syms0))
+    if collect:
+        return pos, count, syms
+    return pos, count
+
+
+def decode_window_fixed(rows, start, end, dec_sym, dec_len, max_len: int):
+    """Baseline variant without early exit: always runs MAX_SYMS rounds
+    (the worst-case bound the paper's `__all_sync` optimization removes).
+    Returns (landing_pos, counts)."""
+    lanes = rows.shape[0]
+    start = start.astype(jnp.int32)
+    end = end.astype(jnp.int32)
+
+    def body(_k, state):
+        pos, count = state
+        active = pos < end
+        win = peek_rows(rows, pos, max_len)
+        length = dec_len[win].astype(jnp.int32)
+        count = jnp.where(active, count + 1, count)
+        pos = jnp.where(active, pos + jnp.maximum(length, 1), pos)
+        return pos, count
+
+    pos0 = jnp.clip(jnp.minimum(start, end), 0, None)
+    return jax.lax.fori_loop(
+        0, MAX_SYMS, body, (pos0, jnp.zeros(lanes, jnp.int32)))
+
+
+def gather_subseq_rows(units: jnp.ndarray, subseq_ids: jnp.ndarray):
+    """Build per-subsequence unit rows: row[s] = units[4*s : 4*s + ROW_UNITS].
+
+    ``units`` is the full stream (uint32[U]); out-of-range reads are zero
+    (the encoder's tail padding semantics).
+    """
+    idx = subseq_ids[..., None] * 4 + jnp.arange(ROW_UNITS, dtype=jnp.int32)
+    in_range = idx < units.shape[0]
+    return jnp.where(in_range,
+                     units[jnp.clip(idx, 0, units.shape[0] - 1)],
+                     jnp.uint32(0))

@@ -1,0 +1,165 @@
+"""Pallas flash-attention forward kernel (§Perf hillclimb D).
+
+The XLA blockwise attention (models/attention.py) materializes every
+(chunk, S_kv) f32 score block to HBM at fusion boundaries — the largest
+single traffic class of every dense train/prefill cell in the §Roofline
+table.  This kernel keeps scores, running max/sum and the output
+accumulator in VMEM scratch; HBM traffic collapses to Q/K/V reads + O
+writes:
+
+  before (per layer, per pass): ~4 * B*H*S*S_kv * 4 B   (scores + exp)
+  after:                         (2*B*H*S*D + 2*B*H*S_kv*D) * 2 B
+
+Grid: (B*H, n_q_blocks, n_kv_blocks) with the kv dimension innermost and
+sequential; (m, l, acc) scratch carries across kv steps (the standard
+flash recurrence).  Causal masking is applied per element from absolute
+block offsets; fully-masked kv blocks are skipped via @pl.when (the
+`__all_sync`-style early exit at block granularity).
+
+Forward-only: the backward runs the XLA path (jax.checkpoint already gives
+it flash-like *memory*; traffic parity needs a bwd kernel — listed as
+future work).  Validated in interpret mode against the blockwise oracle
+(tests/test_flash_kernel.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                  causal: bool, block_q: int, block_k: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # skip kv blocks strictly above the causal diagonal
+    run = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(jnp.bool_(run) if isinstance(run, bool) else run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, dv)
+        s = q @ k.T                                       # (bq, bk)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_s[...] = l_s[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_s[...] = acc_s[...] * alpha + p @ v
+        m_s[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: (BH, Sq, D); k, v: (BH, Skv, D|Dv).  Returns (BH, Sq, Dv)."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]
+    assert sq % block_q == 0 and skv % block_k == 0
+    grid = (bh, sq // block_q, skv // block_k)
+    scale = d ** -0.5
+
+    kernel = functools.partial(_flash_kernel, causal=causal,
+                               block_q=block_q, block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running sum
+            pltpu.VMEM((block_q, dv), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def hbm_bytes_xla(b, h, sq, skv, d, passes=3):
+    """Score-block traffic of the XLA blockwise path (f32 scores + exp)."""
+    return 4 * b * h * sq * skv * 4 * passes
+
+
+def hbm_bytes_kernel(b, h, sq, skv, d, passes=3):
+    """Q/K/V in + O out for the kernel (bf16)."""
+    return (2 * b * h * sq * d + 2 * b * h * skv * d) * 2 * passes
+
+
+# ---------------------------------------------------------------------------
+# Training integration: kernel forward + recomputed XLA backward
+# ---------------------------------------------------------------------------
+
+
+def _xla_attention(q, k, v, causal: bool):
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool))
+        s = jnp.where(mask, s, NEG_INF)
+    return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, -1),
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_trainable(q, k, v, causal: bool = True,
+                              block_q: int = 128, block_k: int = 128):
+    """Differentiable wrapper: Pallas flash forward, recomputed XLA backward.
+
+    The backward re-derives the softmax from (q, k, v) -- flash-style
+    memory (no saved score blocks) with XLA compute; a fused backward
+    kernel is the listed next step."""
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k)
+
+
+def _fwd(q, k, v, causal, block_q, block_k):
+    out = flash_attention(q, k, v, causal=causal, block_q=block_q,
+                          block_k=block_k)
+    return out, (q, k, v)
+
+
+def _bwd(causal, block_q, block_k, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _xla_attention(q_, k_, v_, causal),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention_trainable.defvjp(_fwd, _bwd)

@@ -1,0 +1,55 @@
+"""Pallas histogram kernel (Gomez-Luna-style, as used by cuSZ).
+
+Used twice in the pipeline: (a) quantization-code frequencies for codebook
+construction, (b) compression-ratio class counts for the online tuner
+(paper Alg. 2 step 2).
+
+Grid over symbol chunks; a privatized VMEM accumulator (the analogue of the
+per-block shared-memory sub-histogram) is updated with a vector scatter-add
+and flushed into the single output block, which Pallas keeps resident across
+the sequential grid ("arbitrary" dimension semantics).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(x_ref, out_ref, *, nbins):
+    chunk = x_ref[...].astype(jnp.int32).reshape(-1)
+    local = jnp.zeros((nbins,), jnp.int32).at[
+        jnp.clip(chunk, 0, nbins - 1)].add(1)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += local
+
+
+@functools.partial(
+    jax.jit, static_argnames=("nbins", "chunk", "interpret"))
+def histogram(x, nbins: int, chunk: int = 65536, interpret: bool = True):
+    """int histogram of ``x`` (any int dtype, values clipped to [0, nbins))."""
+    x = x.reshape(-1).astype(jnp.int32)
+    n = x.shape[0]
+    pad = (-n) % chunk
+    if pad:
+        # Out-of-range marker: count into the last bin then subtract.
+        x = jnp.concatenate([x, jnp.full((pad,), nbins - 1, jnp.int32)])
+    grid = (x.shape[0] // chunk,)
+    hist = pl.pallas_call(
+        functools.partial(_hist_kernel, nbins=nbins),
+        grid=grid,
+        in_specs=[pl.BlockSpec((chunk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((nbins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbins,), jnp.int32),
+        interpret=interpret,
+    )(x)
+    if pad:
+        hist = hist.at[nbins - 1].add(-pad)
+    return hist

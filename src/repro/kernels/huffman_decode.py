@@ -1,0 +1,186 @@
+"""Pallas TPU kernels for parallel Huffman decoding (gap-array phases).
+
+Two kernels:
+
+  * ``count_kernel`` -- phase 1 ("get output idx."): each lane decodes its
+    subsequence window and counts codeword starts.  Grid over blocks of
+    ``SS_BLOCK`` subsequences; each block's unit rows live in VMEM.
+
+  * ``decode_tiles_kernel`` -- phase 2 (paper Alg. 1): grid over *output*
+    tiles of ``tile_syms`` symbols.  Each step decodes the statically bounded
+    set of subsequences overlapping its tile into a VMEM staging buffer and
+    emits one dense, aligned tile -- the TPU analogue of the shared-memory
+    staged coalesced write.  ``tile_syms`` is the tunable the online tuner
+    (core/huffman/tuning.py) selects per compression-ratio class.
+
+TPU notes: the in-kernel gather (LUT lookup, per-lane unit fetch) lowers to
+Mosaic dynamic-gather over VMEM; the local scatter into the staging tile is
+a vector scatter confined to VMEM.  Validated in interpret mode (this
+container is CPU-only); BlockSpecs are written for real VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common as C
+
+DEFAULT_SS_BLOCK = 256   # subsequences per count-kernel block
+
+
+def count_kernel_body(rows_ref, start_ref, end_ref, sym_ref, len_ref,
+                      counts_ref, land_ref, *, max_len):
+    rows = rows_ref[...]
+    start = start_ref[...]
+    end = end_ref[...]
+    dec_sym = sym_ref[...]
+    dec_len = len_ref[...]
+    landing, counts = C.decode_window(rows, start, end, dec_sym, dec_len,
+                                      max_len, collect=False)
+    counts_ref[...] = counts
+    land_ref[...] = landing
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_len", "ss_block", "interpret"))
+def count_subseq(rows, start_local, end_local, dec_sym, dec_len,
+                 max_len: int, ss_block: int = DEFAULT_SS_BLOCK,
+                 interpret: bool = True):
+    """Per-subsequence codeword counts + landing positions.
+
+    rows: uint32[n_subseq, ROW_UNITS]; start/end_local: int32[n_subseq]
+    (row-local bit windows).  Returns (counts, landing) int32[n_subseq].
+    """
+    n = rows.shape[0]
+    assert n % ss_block == 0, (n, ss_block)
+    grid = (n // ss_block,)
+    lut = dec_sym.shape[0]
+    kernel = functools.partial(count_kernel_body, max_len=max_len)
+    counts, landing = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ss_block, C.ROW_UNITS), lambda b: (b, 0)),
+            pl.BlockSpec((ss_block,), lambda b: (b,)),
+            pl.BlockSpec((ss_block,), lambda b: (b,)),
+            pl.BlockSpec((lut,), lambda b: (0,)),
+            pl.BlockSpec((lut,), lambda b: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ss_block,), lambda b: (b,)),
+            pl.BlockSpec((ss_block,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, start_local, end_local, dec_sym, dec_len)
+    return counts, landing
+
+
+def decode_tiles_kernel_body(rows_ref, start_ref, end_ref, off_ref, sym_ref,
+                             len_ref, out_ref, *, max_len, tile_syms):
+    rows = rows_ref[0]            # (ss_max, ROW_UNITS)
+    start = start_ref[0]          # (ss_max,) row-local start bits
+    end = end_ref[0]              # (ss_max,)
+    off = off_ref[0]              # (ss_max,) tile-local output offsets
+    dec_sym = sym_ref[...]
+    dec_len = len_ref[...]
+
+    _, counts, padded = C.decode_window(rows, start, end, dec_sym, dec_len,
+                                        max_len, collect=True)
+    # VMEM staging: scatter each lane's symbols to its tile-local positions.
+    k = jnp.arange(C.MAX_SYMS, dtype=jnp.int32)[None, :]
+    local = off[:, None] + k
+    valid = (k < counts[:, None]) & (local >= 0) & (local < tile_syms)
+    tile = jnp.zeros((tile_syms,), jnp.uint16)
+    tile = tile.at[jnp.where(valid, local, tile_syms)].set(
+        jnp.where(valid, padded, 0), mode="drop")
+    out_ref[0] = tile
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_len", "tile_syms", "ss_max", "n_out", "interpret"))
+def decode_tiles(rows, start_local, end_local, off_local, dec_sym, dec_len,
+                 max_len: int, tile_syms: int, ss_max: int, n_out: int,
+                 interpret: bool = True):
+    """Tile-centric decode+write.
+
+    rows:        uint32[n_tiles, ss_max, ROW_UNITS]
+    start/end:   int32[n_tiles, ss_max]   (row-local windows)
+    off_local:   int32[n_tiles, ss_max]   (output offset - tile base;
+                 invalid lanes carry ``tile_syms``)
+    Returns uint16[n_out].
+    """
+    n_tiles = rows.shape[0]
+    lut = dec_sym.shape[0]
+    kernel = functools.partial(decode_tiles_kernel_body, max_len=max_len,
+                               tile_syms=tile_syms)
+    tiles = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, ss_max, C.ROW_UNITS), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((lut,), lambda t: (0,)),
+            pl.BlockSpec((lut,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_syms), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, tile_syms), jnp.uint16),
+        interpret=interpret,
+    )(rows, start_local, end_local, off_local, dec_sym, dec_len)
+    return tiles.reshape(-1)[:n_out]
+
+
+def decode_padded_kernel_body(rows_ref, start_ref, end_ref, sym_ref, len_ref,
+                              out_ref, counts_ref, *, max_len):
+    """Baseline decode+write without staging: emits the padded
+    (subseq, MAX_SYMS) layout that ops-level compaction then gathers --
+    the structural analogue of the original decoders' uncoalesced writes."""
+    rows = rows_ref[...]
+    start = start_ref[...]
+    end = end_ref[...]
+    _, counts, padded = C.decode_window(rows, start, end, sym_ref[...],
+                                        len_ref[...], max_len, collect=True)
+    out_ref[...] = padded
+    counts_ref[...] = counts
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_len", "ss_block", "interpret"))
+def decode_padded(rows, start_local, end_local, dec_sym, dec_len,
+                  max_len: int, ss_block: int = DEFAULT_SS_BLOCK,
+                  interpret: bool = True):
+    n = rows.shape[0]
+    assert n % ss_block == 0
+    lut = dec_sym.shape[0]
+    kernel = functools.partial(decode_padded_kernel_body, max_len=max_len)
+    padded, counts = pl.pallas_call(
+        kernel,
+        grid=(n // ss_block,),
+        in_specs=[
+            pl.BlockSpec((ss_block, C.ROW_UNITS), lambda b: (b, 0)),
+            pl.BlockSpec((ss_block,), lambda b: (b,)),
+            pl.BlockSpec((ss_block,), lambda b: (b,)),
+            pl.BlockSpec((lut,), lambda b: (0,)),
+            pl.BlockSpec((lut,), lambda b: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ss_block, C.MAX_SYMS), lambda b: (b, 0)),
+            pl.BlockSpec((ss_block,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, C.MAX_SYMS), jnp.uint16),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, start_local, end_local, dec_sym, dec_len)
+    return padded, counts

@@ -1,0 +1,118 @@
+"""Pallas kernel for the self-synchronization phase (W&S, paper §IV-A).
+
+Grid over sequences; lanes are the sequence's subsequences.  Each round every
+lane decodes its 128-bit window from its current candidate offset and hands
+the landing position to the next lane; the block reaches a fixed point when
+no offset changes.
+
+The paper's optimization -- exiting the block as soon as *all* lanes have
+validated their sync point (`__all_sync`) instead of spinning to the
+worst-case bound -- maps to the ``while_loop``-with-convergence-predicate
+here; the un-optimized variant (``early_exit=False``) runs the worst-case
+``subseqs_per_seq`` rounds unconditionally.  Both are kept so the benchmark
+can reproduce the paper's ~11% phase-1 win.
+
+Inter-sequence synchronization (phase 2) chains sequence-head offsets at the
+ops level (`repro.kernels.ops.selfsync_sync`) -- a separate launch, as in the
+paper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common as C
+
+
+def selfsync_kernel_body(rows_ref, head_ref, end_ref, sym_ref, len_ref,
+                         start_ref, counts_ref, land_ref, rounds_ref, *,
+                         max_len, early_exit, subseqs_per_seq):
+    rows = rows_ref[0]            # (SS, ROW_UNITS)
+    head = head_ref[0]            # (1,) int32: candidate offset of lane 0
+    end = end_ref[0]              # (SS,) row-local window ends
+    dec_sym = sym_ref[...]
+    dec_len = len_ref[...]
+    ss = rows.shape[0]
+
+    start0 = jnp.zeros((ss,), jnp.int32).at[0].set(head[0])
+
+    def round_fn(start):
+        landing, counts = C.decode_window(rows, start, end, dec_sym, dec_len,
+                                          max_len, collect=False)
+        # landing is local to each lane's row; lane j's landing lies in
+        # [128, 128+max_len) => offset (landing - 128) into lane j+1's row.
+        prop = jnp.concatenate([start[:1], landing[:-1] - 128])
+        return prop, landing, counts
+
+    if early_exit:
+        def cond(state):
+            start, _, _, changed, rounds = state
+            return jnp.logical_and(changed, rounds < subseqs_per_seq)
+
+        def body(state):
+            start, _, _, _, rounds = state
+            new_start, landing, counts = round_fn(start)
+            changed = jnp.any(new_start != start)
+            return new_start, landing, counts, changed, rounds + 1
+
+        zero = jnp.zeros((ss,), jnp.int32)
+        start, landing, counts, _, rounds = jax.lax.while_loop(
+            cond, body, (start0, zero, zero, jnp.bool_(True), jnp.int32(0)))
+    else:
+        start, landing, counts = start0, None, None
+        for _ in range(subseqs_per_seq):
+            start, landing, counts = round_fn(start)
+        rounds = jnp.int32(subseqs_per_seq)
+
+    start_ref[0] = start
+    counts_ref[0] = counts
+    land_ref[0] = landing
+    rounds_ref[0] = rounds[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_len", "subseqs_per_seq", "early_exit", "interpret"))
+def selfsync_intra(rows, heads, end_local, dec_sym, dec_len, max_len: int,
+                   subseqs_per_seq: int, early_exit: bool = True,
+                   interpret: bool = True):
+    """Per-sequence sync discovery.
+
+    rows: uint32[n_seq, SS, ROW_UNITS]; heads: int32[n_seq, 1] candidate
+    offsets for each sequence's first subsequence; end_local: int32[n_seq, SS].
+    Returns (start_local, counts, landing, rounds) with shapes
+    ([n_seq, SS], [n_seq, SS], [n_seq, SS], [n_seq, 1]).
+    """
+    n_seq, ss, _ = rows.shape
+    lut = dec_sym.shape[0]
+    kernel = functools.partial(
+        selfsync_kernel_body, max_len=max_len, early_exit=early_exit,
+        subseqs_per_seq=subseqs_per_seq)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_seq,),
+        in_specs=[
+            pl.BlockSpec((1, ss, C.ROW_UNITS), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, 1), lambda s: (s, 0)),
+            pl.BlockSpec((1, ss), lambda s: (s, 0)),
+            pl.BlockSpec((lut,), lambda s: (0,)),
+            pl.BlockSpec((lut,), lambda s: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ss), lambda s: (s, 0)),
+            pl.BlockSpec((1, ss), lambda s: (s, 0)),
+            pl.BlockSpec((1, ss), lambda s: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_seq, ss), jnp.int32),
+            jax.ShapeDtypeStruct((n_seq, ss), jnp.int32),
+            jax.ShapeDtypeStruct((n_seq, ss), jnp.int32),
+            jax.ShapeDtypeStruct((n_seq, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, heads, end_local, dec_sym, dec_len)

@@ -1,0 +1,102 @@
+"""Pallas kernels for the Lorenzo transform (cuSZ dual-quant, DESIGN.md §3).
+
+``quantize1d`` is fully parallel (dual-quantization removed the loop-carried
+dependence); ``reconstruct1d`` is the inverse prefix sum, implemented with a
+block-local cumsum plus a carry kept in VMEM scratch across the sequential
+grid -- the standard single-pass chained-scan structure.
+
+2-D/3-D Lorenzo is composed at the ops level from per-axis applications
+(the per-axis pass is the same 1-D kernel applied to rows); see
+``repro.kernels.ops.lorenzo_*``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, xprev_ref, teb_ref, o_code_ref, o_out_ref,
+                  o_resid_ref, *, radius):
+    # two_eb arrives as a runtime input: XLA strength-reduces division by a
+    # *constant* to a reciprocal multiply, which flips lattice ties vs the
+    # jnp oracle (whose eb is a traced argument -> true division).
+    x = x_ref[...]
+    xp = xprev_ref[...]
+    two_eb = teb_ref[0]
+    q = jnp.round(x / two_eb).astype(jnp.int32)
+    qp = jnp.round(xp / two_eb).astype(jnp.int32)
+    d = q - qp
+    code = d + radius
+    outlier = (code < 0) | (code >= 2 * radius)
+    o_code_ref[...] = jnp.where(outlier, 0, code).astype(jnp.uint16)
+    o_out_ref[...] = outlier.astype(jnp.int8)
+    o_resid_ref[...] = d
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eb", "radius", "block", "interpret"))
+def quantize1d(x, eb, radius: int = 512, block: int = 4096,
+               interpret: bool = True):
+    """1-D dual-quant Lorenzo: returns (codes u16, outlier i8, residual i32).
+
+    The predecessor element crosses block boundaries, so the shifted copy is
+    passed as a second input (built by ops with a cheap roll).
+    """
+    n = x.shape[0]
+    assert n % block == 0
+    xprev = jnp.roll(x, 1).at[0].set(0.0)
+    grid = (n // block,)
+    two_eb = jnp.full((1,), 2.0 * eb, jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, radius=radius),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint16),
+            jax.ShapeDtypeStruct((n,), jnp.int8),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, xprev, two_eb)
+
+
+def _recon_kernel(d_ref, o_ref, carry, *, two_eb):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        carry[0] = jnp.int32(0)
+
+    d = d_ref[...].astype(jnp.int32)
+    q = jnp.cumsum(d) + carry[0]
+    carry[0] = q[-1]
+    o_ref[...] = q.astype(jnp.float32) * two_eb
+
+
+@functools.partial(jax.jit, static_argnames=("eb", "block", "interpret"))
+def reconstruct1d(d, eb, block: int = 4096, interpret: bool = True):
+    """Inverse 1-D Lorenzo: chained block cumsum, x = 2*eb * prefix(d)."""
+    n = d.shape[0]
+    assert n % block == 0
+    two_eb = float(2.0 * eb)
+    return pl.pallas_call(
+        functools.partial(_recon_kernel, two_eb=two_eb),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(d)

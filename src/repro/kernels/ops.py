@@ -1,0 +1,255 @@
+"""jit'd wrappers around the Pallas kernels + the full kernel decode pipeline.
+
+Everything here mirrors a function in ``repro.kernels.ref`` (the pure-jnp
+oracle); tests sweep shapes/dtypes and assert exact equality.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.huffman import decode as hd
+from repro.core.huffman.bits import SUBSEQ_BITS
+from repro.core.huffman.encode import EncodedStream
+from repro.kernels import common as C
+from repro.kernels import histogram as _hist
+from repro.kernels import huffman_decode as _dec
+from repro.kernels import huffman_selfsync as _sync
+from repro.kernels import lorenzo as _lor
+
+# ---------------------------------------------------------------------------
+# Metadata prep shared by the decode kernels
+# ---------------------------------------------------------------------------
+
+
+def _subseq_windows(start_abs, end_abs, total_bits):
+    """Convert absolute bit windows to (subseq_id, row-local start/end)."""
+    start_abs = start_abs.astype(jnp.int32)
+    ids = start_abs // SUBSEQ_BITS
+    base = ids * SUBSEQ_BITS
+    start_local = start_abs - base
+    end_local = jnp.clip(jnp.minimum(end_abs, total_bits) - base, 0,
+                         C.ROW_UNITS * 32)
+    return ids, start_local, end_local
+
+
+def subseq_counts(units, dec_sym, dec_len, start_abs, end_abs, total_bits,
+                  max_len: int, interpret: bool = True):
+    ids, start_local, end_local = _subseq_windows(start_abs, end_abs,
+                                                  total_bits)
+    n = ids.shape[0]
+    ss_block = _dec.DEFAULT_SS_BLOCK
+    pad = (-n) % ss_block
+    if pad:
+        ids = jnp.concatenate([ids, jnp.zeros(pad, jnp.int32)])
+        start_local = jnp.concatenate([start_local, jnp.zeros(pad, jnp.int32)])
+        # start == end => inactive padding lanes
+        end_local = jnp.concatenate([end_local, jnp.zeros(pad, jnp.int32)])
+    rows = C.gather_subseq_rows(jnp.asarray(units), ids)
+    counts, landing = _dec.count_subseq(rows, start_local, end_local,
+                                        dec_sym, dec_len, max_len,
+                                        interpret=interpret)
+    return counts[:n], landing[:n]
+
+
+def decode_write_tiles(units, dec_sym, dec_len, start_bits, end_bits, offsets,
+                       total_bits, max_len: int, n_out: int, tile_syms: int,
+                       ss_max: int, interpret: bool = True):
+    """Kernel-backed phase 4; signature-compatible with the jnp reference
+    ``core.huffman.decode.decode_write_tiles`` (so the tuner can inject it).
+    """
+    units = jnp.asarray(units)
+    n_subseq = start_bits.shape[0]
+    n_tiles = (n_out + tile_syms - 1) // tile_syms
+    tile_base = jnp.arange(n_tiles, dtype=jnp.int32) * tile_syms
+    s0 = jnp.clip(jnp.searchsorted(offsets, tile_base, side="right") - 1,
+                  0, n_subseq - 1)
+
+    lane = jnp.arange(ss_max, dtype=jnp.int32)
+    subs_raw = s0[:, None] + lane[None, :]
+    valid = subs_raw < n_subseq
+    subs = jnp.clip(subs_raw, 0, n_subseq - 1)
+
+    ids, start_local, end_local = _subseq_windows(
+        start_bits[subs], end_bits[subs], total_bits)
+    # Invalid (clipped) lanes: no work, out-of-tile offset.
+    start_local = jnp.where(valid, start_local, 0)
+    end_local = jnp.where(valid, end_local, 0)
+    off_local = jnp.where(valid, offsets[subs] - tile_base[:, None],
+                          tile_syms)
+
+    rows = C.gather_subseq_rows(units, ids)
+    return _dec.decode_tiles(rows, start_local, end_local,
+                             off_local.astype(jnp.int32), dec_sym, dec_len,
+                             max_len, tile_syms, ss_max, n_out,
+                             interpret=interpret)
+
+
+def decode_padded_compact(units, dec_sym, dec_len, start_abs, end_abs,
+                          total_bits, max_len: int, n_out: int,
+                          interpret: bool = True):
+    """Kernel-backed baseline phase 4 (padded layout + ops-level compaction).
+
+    Reproduces the original decoders' scattered-write cost structure."""
+    ids, start_local, end_local = _subseq_windows(start_abs, end_abs,
+                                                  total_bits)
+    n = ids.shape[0]
+    ss_block = _dec.DEFAULT_SS_BLOCK
+    pad = (-n) % ss_block
+    if pad:
+        z = jnp.zeros(pad, jnp.int32)
+        ids, start_local, end_local = (jnp.concatenate([ids, z]),
+                                       jnp.concatenate([start_local, z]),
+                                       jnp.concatenate([end_local, z]))
+    rows = C.gather_subseq_rows(jnp.asarray(units), ids)
+    padded, counts = _dec.decode_padded(rows, start_local, end_local,
+                                        dec_sym, dec_len, max_len,
+                                        interpret=interpret)
+    padded, counts = padded[:n], counts[:n]
+    offsets = hd.output_offsets(counts)
+    out_pos = jnp.arange(n_out, dtype=jnp.int32)
+    owner = jnp.clip(jnp.searchsorted(offsets, out_pos, side="right") - 1,
+                     0, n - 1)
+    within = out_pos - offsets[owner]
+    return padded[owner, jnp.clip(within, 0, C.MAX_SYMS - 1)], counts
+
+
+def selfsync_sync(units, dec_sym, dec_len, total_bits, n_subseq: int,
+                  subseqs_per_seq: int, max_len: int,
+                  early_exit: bool = True, interpret: bool = True):
+    """Kernel-backed sync discovery: intra-sequence kernel + inter-sequence
+    head chaining (phases 1+2).  Returns (start_abs, counts, stats)."""
+    units = jnp.asarray(units)
+    n_seq = n_subseq // subseqs_per_seq
+    boundaries = jnp.arange(n_subseq, dtype=jnp.int32) * SUBSEQ_BITS
+    ids = jnp.arange(n_subseq, dtype=jnp.int32)
+    rows = C.gather_subseq_rows(units, ids).reshape(
+        n_seq, subseqs_per_seq, C.ROW_UNITS)
+    end_local = jnp.clip(
+        jnp.minimum(boundaries + SUBSEQ_BITS, total_bits) - boundaries,
+        0, C.ROW_UNITS * 32).reshape(n_seq, subseqs_per_seq)
+
+    run = partial(_sync.selfsync_intra, rows, end_local=end_local,
+                  dec_sym=dec_sym, dec_len=dec_len, max_len=max_len,
+                  subseqs_per_seq=subseqs_per_seq, early_exit=early_exit,
+                  interpret=interpret)
+
+    def one_pass(heads):
+        start, counts, landing, rounds = run(heads=heads)
+        # Landing of each sequence's last lane seeds the next sequence.
+        new_heads = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), landing[:-1, -1] - 128])[:, None]
+        return start, counts, rounds, new_heads
+
+    heads = jnp.zeros((n_seq, 1), jnp.int32)
+    start, counts, rounds, new_heads = one_pass(heads)
+    total_rounds = rounds
+
+    def cond(state):
+        heads, new_heads, *_ = state
+        return jnp.any(heads != new_heads)
+
+    def body(state):
+        _, heads, start, counts, total_rounds = state
+        start, counts, rounds, new_heads = one_pass(heads)
+        return heads, new_heads, start, counts, total_rounds + rounds
+
+    _, _, start, counts, total_rounds = jax.lax.while_loop(
+        cond, body, (heads, new_heads, start, counts, total_rounds))
+
+    start_abs = boundaries + start.reshape(-1)
+    return start_abs, counts.reshape(-1), total_rounds
+
+
+def decode_pipeline(stream: EncodedStream, dec_sym, dec_len, max_len: int,
+                    n_out: int, method: str = "gap", tile_syms: int = 4096,
+                    interpret: bool = True, tuned: bool = False,
+                    early_exit: bool = True):
+    """Full kernel-path decoder (used by ``core.sz.compressor.decompress``).
+
+    method="gap":       count kernel from gap starts -> prefix sum -> tiles
+    method="selfsync":  sync kernel (+inter chaining) -> prefix sum -> tiles
+    tuned=True routes the decode-write through the per-CR-class tuner with
+    the Pallas tile kernel injected.
+    """
+    units = jnp.asarray(stream.units)
+    n_subseq = stream.gaps.shape[0]
+    boundaries = jnp.arange(n_subseq, dtype=jnp.int32) * SUBSEQ_BITS
+    ends_abs = boundaries + SUBSEQ_BITS
+
+    if method == "gap":
+        start_abs = boundaries + stream.gaps.astype(jnp.int32)
+        counts, _ = subseq_counts(units, dec_sym, dec_len, start_abs,
+                                  ends_abs, stream.total_bits, max_len,
+                                  interpret=interpret)
+    elif method == "selfsync":
+        start_abs, counts, _ = selfsync_sync(
+            units, dec_sym, dec_len, stream.total_bits, n_subseq,
+            stream.subseqs_per_seq, max_len, early_exit=early_exit,
+            interpret=interpret)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    if tuned:
+        from repro.core.huffman import tuning
+
+        return tuning.decode_tuned(
+            stream, dec_sym, dec_len, max_len, n_out, start_abs, counts,
+            decode_tiles_fn=partial(decode_write_tiles, interpret=interpret))
+
+    offsets = hd.output_offsets(counts)
+    ss_max = tile_syms // ((SUBSEQ_BITS - max_len) // max_len + 1) + 2
+    return decode_write_tiles(units, dec_sym, dec_len, start_abs, ends_abs,
+                              offsets, stream.total_bits, max_len, n_out,
+                              tile_syms, ss_max, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Histogram + Lorenzo wrappers
+# ---------------------------------------------------------------------------
+
+histogram = _hist.histogram
+
+
+def lorenzo_quantize(x, eb, radius: int = 512, interpret: bool = True):
+    """N-D dual-quant Lorenzo via the 1-D kernel applied per axis.
+
+    For 1-D inputs this is a single kernel launch; N-D composes the exact
+    integer finite-difference per axis at the ops level (the round-to-lattice
+    happens once, inside the kernel, along the innermost axis pass).
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block = 4096
+    pad = (-n) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros(pad, flat.dtype)])
+    if len(shape) == 1:
+        codes, outlier, resid = _lor.quantize1d(flat, float(eb), radius=radius,
+                                                interpret=interpret)
+        return codes[:n], outlier[:n].astype(bool), resid[:n]
+    # N-D: lattice quantize via kernel's rounding on the flat view, then the
+    # exact multi-axis finite difference in jnp (integer, exact).
+    from repro.core.sz import lorenzo as _ref
+
+    return _ref.quantize(x, eb, radius=radius)
+
+
+def lorenzo_reconstruct(d, eb, shape=None, interpret: bool = True):
+    """Inverse Lorenzo; 1-D uses the chained-scan kernel."""
+    if shape is None or len(shape) == 1:
+        n = d.shape[0]
+        block = 4096
+        pad = (-n) % block
+        dd = jnp.concatenate([d, jnp.zeros(pad, d.dtype)]) if pad else d
+        out = _lor.reconstruct1d(dd, float(eb), interpret=interpret)
+        return out[:n]
+    q = d.reshape(shape)
+    for axis in range(len(shape)):
+        q = jnp.cumsum(q, axis=axis)
+    return q.astype(jnp.float32) * jnp.float32(2 * eb)

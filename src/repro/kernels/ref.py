@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (signature-matched to ops.py).
+
+These delegate to the reference implementations in ``repro.core`` so each
+kernel has exactly one source of truth; tests sweep shapes / dtypes /
+codebook skews and assert bit-exact agreement with ``repro.kernels.ops``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.huffman import decode as hd
+from repro.core.huffman.bits import SUBSEQ_BITS
+from repro.core.huffman.encode import EncodedStream
+from repro.core.sz import lorenzo as _lor
+
+
+def subseq_counts(units, dec_sym, dec_len, start_abs, end_abs, total_bits,
+                  max_len: int):
+    landing, counts = hd.subseq_scan(jnp.asarray(units), dec_sym, dec_len,
+                                     start_abs, end_abs, total_bits, max_len)
+    return counts, landing
+
+
+def decode_write_tiles(units, dec_sym, dec_len, start_bits, end_bits, offsets,
+                       total_bits, max_len: int, n_out: int, tile_syms: int,
+                       ss_max: int):
+    return hd.decode_write_tiles(jnp.asarray(units), dec_sym, dec_len,
+                                 start_bits, end_bits, offsets, total_bits,
+                                 max_len, n_out, tile_syms, ss_max)
+
+
+def decode_padded_compact(units, dec_sym, dec_len, start_abs, end_abs,
+                          total_bits, max_len: int, n_out: int):
+    out, counts = hd.decode_write(jnp.asarray(units), dec_sym, dec_len,
+                                  start_abs, total_bits, max_len, n_out)
+    return out, counts
+
+
+def selfsync_sync(units, dec_sym, dec_len, total_bits, n_subseq: int,
+                  subseqs_per_seq: int, max_len: int):
+    units = jnp.asarray(units)
+    start, _ = hd.selfsync_intra(units, dec_sym, dec_len, total_bits,
+                                 n_subseq, max_len, subseqs_per_seq)
+    start, _ = hd.selfsync_inter(units, dec_sym, dec_len, start, total_bits,
+                                 max_len, subseqs_per_seq)
+    boundaries = jnp.arange(n_subseq, dtype=jnp.int32) * SUBSEQ_BITS
+    _, counts = hd.subseq_scan(units, dec_sym, dec_len, start,
+                               boundaries + SUBSEQ_BITS, total_bits, max_len)
+    return start, counts
+
+
+def decode_pipeline(stream: EncodedStream, dec_sym, dec_len, max_len: int,
+                    n_out: int, method: str = "gap", tile_syms: int = 4096):
+    if method == "gap":
+        return hd.decode_gap_array(stream, dec_sym, dec_len, max_len, n_out,
+                                   tile_syms=tile_syms)
+    if method == "selfsync":
+        return hd.decode_selfsync(stream, dec_sym, dec_len, max_len, n_out,
+                                  tile_syms=tile_syms)
+    raise ValueError(method)
+
+
+def histogram(x, nbins: int):
+    return jnp.bincount(jnp.clip(x.reshape(-1).astype(jnp.int32), 0,
+                                 nbins - 1), length=nbins)
+
+
+def lorenzo_quantize(x, eb, radius: int = 512):
+    codes, outlier, resid = _lor.quantize(x, eb, radius=radius)
+    return codes.reshape(-1), outlier.reshape(-1), resid.reshape(-1)
+
+
+def lorenzo_reconstruct(d, eb, shape=None):
+    if shape is None:
+        shape = d.shape
+    q = d.reshape(shape)
+    for axis in range(len(shape)):
+        q = jnp.cumsum(q, axis=axis)
+    return (q.astype(jnp.float32) * jnp.float32(2 * eb)).reshape(-1)

@@ -1,0 +1,409 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           "--xla_allow_excess_precision=false "
+                           + os.environ.get("XLA_FLAGS", ""))
+# --xla_allow_excess_precision=false: stops XLA from keeping f32 "excess
+# precision" copies of bf16 remat stacks (observed: a full f32 duplicate of
+# the (L, B, S, d) saved-activation stack, 2x the bf16 one).
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init).  This module proves the distribution config is
+coherent: for each cell it AOT-compiles train_step / serve_step against
+ShapeDtypeStruct inputs on the production mesh, then records
+
+  * memory_analysis()  -- per-device bytes (proves the cell fits 16 GB HBM)
+  * cost_analysis()    -- per-device HLO FLOPs / bytes for §Roofline
+  * collective bytes   -- parsed from the partitioned HLO text (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute operands)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+                                       # orchestrates one subprocess per cell
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode as D
+from repro.models import steps as S
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, count_params
+from repro.optim import adamw
+from repro.runtime import pspec
+from repro.runtime import sharding as shd
+
+V5E = {"flops_bf16": 197e12, "hbm_gbs": 819e9, "ici_link_gbs": 50e9}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64)\[([\d,]*)\]")
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum operand bytes of every collective op in partitioned HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*[^\s]+\s+([a-z\-]+)\(", stripped)
+        if not m or m.group(1) not in _COLLECTIVES:
+            continue
+        op = m.group(1)
+        # operands live inside the call parens; shapes appear as dtype[dims]
+        paren = stripped[stripped.index("(", stripped.index(op)):]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(paren):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES.get(dt, 4)
+        out[op] += nbytes
+        count[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = count
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _prod(shape):
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell) -> dict:
+    """Abstract inputs for one shape cell (the paper-spec'd entry point)."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            from repro.configs.qwen2_vl_72b import N_PATCHES
+            text = s - N_PATCHES
+            batch = {
+                "tokens": sds((b, text), jnp.int32),
+                "labels": sds((b, s), jnp.int32),
+                "extra_embeds": sds((b, N_PATCHES, cfg.d_model), cfg.cdt),
+            }
+        elif cfg.family == "encdec":
+            batch = {
+                "tokens": sds((b, s), jnp.int32),
+                "labels": sds((b, s), jnp.int32),
+                "extra_embeds": sds((b, cfg.encoder_seq, cfg.d_model),
+                                    cfg.cdt),
+            }
+        else:
+            batch = {
+                "tokens": sds((b, s), jnp.int32),
+                "labels": sds((b, s), jnp.int32),
+            }
+        return batch
+    if cell.kind == "decode":
+        cache = {k: sds(shape, dt)
+                 for k, (shape, dt) in D.cache_spec(cfg, b, s).items()}
+        return {
+            "token": sds((b, 1), jnp.int32),
+            "cache": cache,
+            "pos": sds((), jnp.int32),
+        }
+    raise ValueError(cell.kind)
+
+
+def opt_config(cfg: ModelConfig) -> adamw.AdamWConfig:
+    big = count_params(cfg) > 5e10
+    return adamw.AdamWConfig(state_dtype="int8" if big else "float32")
+
+
+def micro_batches(cfg: ModelConfig) -> int:
+    """Gradient-accumulation factor per arch (keeps activation stacks plus
+    XLA:CPU's hoisted-conversion copies inside the 16 GB budget)."""
+    n = count_params(cfg)
+    if n > 3e11:
+        return 8
+    if n > 5e10:
+        return 4
+    if n > 8e9:
+        return 2
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             tp_override: dict | None = None,
+             n_micro_override: int | None = None) -> dict:
+    cfg = configs.get_config(arch)
+    if tp_override:
+        cfg = dataclasses.replace(cfg, **tp_override)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pspec.set_mesh(mesh)
+    n_chips = mesh.size
+    t0 = time.time()
+
+    params_shape = jax.eval_shape(
+        lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+    p_shard = shd.param_shardings(params_shape, mesh)
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod, "n_chips": n_chips,
+        "kind": cell.kind,
+        "n_params": int(sum(
+            _prod(x.shape) for x in jax.tree.leaves(params_shape))),
+    }
+
+    if cell.kind == "train":
+        ocfg = opt_config(cfg)
+        opt_shape = jax.eval_shape(lambda p: adamw.init(p, ocfg),
+                                   params_shape)
+        o_shard = shd.opt_state_shardings(opt_shape, mesh)
+        batch = input_specs(cfg, cell)
+        b_shard = shd.batch_shardings(batch, mesh)
+        n_micro = n_micro_override or micro_batches(cfg)
+        step = S.make_train_step(cfg, ocfg, n_micro=n_micro,
+                                 grad_shardings=p_shard)
+        result["n_micro"] = n_micro
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard,
+                           jax.tree.map(lambda _: shd.NamedSharding(
+                               mesh, shd.P()), {"ce": 0, "aux": 0, "loss": 0,
+                                                "grad_norm": 0,
+                                                **({"mtp": 0} if cfg.mtp
+                                                   else {})})),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_shape, opt_shape, batch)
+    elif cell.kind == "prefill":
+        batch = input_specs(cfg, cell)
+        b_shard = shd.batch_shardings(batch, mesh)
+        step = S.make_prefill_step(cfg)
+        if "extra_embeds" in batch:
+            def step2(params, tokens, extra):
+                return step(params, tokens, extra_embeds=extra)
+            jitted = jax.jit(step2, in_shardings=(
+                p_shard, b_shard["tokens"], b_shard["extra_embeds"]))
+            lowered = jitted.lower(params_shape, batch["tokens"],
+                                   batch["extra_embeds"])
+        else:
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard["tokens"]))
+            lowered = jitted.lower(params_shape, batch["tokens"])
+    else:  # decode
+        spec = input_specs(cfg, cell)
+        c_shard = shd.cache_shardings(spec["cache"], mesh)
+        step = S.make_serve_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard,
+                          shd.batch_shardings(spec["token"], mesh),
+                          c_shard,
+                          shd.NamedSharding(mesh, shd.P())),
+            donate_argnums=(2,),
+        )
+        lowered = jitted.lower(params_shape, spec["token"], spec["cache"],
+                               spec["pos"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    # XLA cost_analysis counts while bodies ONCE (scan-over-layers would be
+    # undercounted by ~n_layers); the corrected model multiplies loop bodies
+    # by their trip counts (launch/hlo_cost.py).
+    from repro.launch import hlo_cost
+    corrected = hlo_cost.corrected_costs(hlo)
+
+    model_flops = analytic_model_flops(cfg, cell) / n_chips
+
+    flops = corrected["flops"]
+    bytes_acc = corrected["bytes"]
+    coll_total = corrected["collective_bytes"]
+    result.update({
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "mem": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_per_device_gib": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 - ma.alias_size_in_bytes + ma.temp_size_in_bytes) / 2**30,
+                3),
+        },
+        "cost": {"flops_per_device": flops,
+                 "bytes_per_device": bytes_acc,
+                 "raw_xla_flops": float(ca.get("flops", 0.0)),
+                 "raw_xla_bytes": float(ca.get("bytes accessed", 0.0)),
+                 "model_flops_per_device": model_flops,
+                 "model_over_hlo": model_flops / flops if flops else 0.0},
+        "collectives": dict(coll, loop_corrected_total=coll_total),
+        "roofline": roofline_terms(flops, bytes_acc, coll_total),
+        "ok": True,
+    })
+    return result
+
+
+def analytic_model_flops(cfg: ModelConfig, cell) -> float:
+    """MODEL_FLOPS: 6*N*D (train, dense) / 6*N_active*D (MoE) / 2*N per
+    decoded token; prefill = 2*N*D.  Attention S^2 terms excluded by
+    convention (the ratio vs HLO FLOPs then *shows* attention+remat cost)."""
+    n = count_params(cfg)
+    if cfg.moe:
+        active_frac = (
+            cfg.first_k_dense * 1.0 +
+            (cfg.n_layers - cfg.first_k_dense)
+            * (cfg.n_shared_experts + cfg.top_k) / max(cfg.n_experts, 1)
+        ) / cfg.n_layers
+        routed_total = count_params(cfg)
+        # approximate: embedding+attention always active; experts scaled
+        moe_p = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * cfg.d_expert
+        n = routed_total - moe_p + int(
+            moe_p * (cfg.top_k + cfg.n_shared_experts) / cfg.n_experts)
+    d_tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        return 6.0 * n * d_tokens
+    if cell.kind == "prefill":
+        return 2.0 * n * d_tokens
+    return 2.0 * n * cell.global_batch  # decode: one token per sequence
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float, coll_bytes_dev: float):
+    """Three roofline terms in seconds (per-device quantities in, so chips
+    cancel: T = per-device work / per-chip peak)."""
+    t_c = flops_dev / V5E["flops_bf16"]
+    t_m = bytes_dev / V5E["hbm_gbs"]
+    t_l = coll_bytes_dev / V5E["ici_link_gbs"]
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_l, "collective"))
+    return {
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_l,
+        "dominant": dom[1],
+        "bound_step_s": max(t_c, t_m, t_l),
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI / orchestration
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    help="config override key=val (val parsed as python "
+                         "literal), e.g. --override kv_quant=True")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    if args.all:
+        orchestrate(args)
+        return
+
+    import ast
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        overrides[k] = ast.literal_eval(v)
+    res = run_cell(args.arch, args.shape, args.multi_pod,
+                   tp_override=overrides or None,
+                   n_micro_override=args.n_micro)
+    print(json.dumps(res))
+    # Paper-spec'd prints:
+    sys.stderr.write(
+        f"# {args.arch} x {args.shape} mesh={res['mesh']}: "
+        f"peak {res['mem']['peak_per_device_gib']} GiB/device, "
+        f"{res['cost']['flops_per_device']:.3e} flops/device, "
+        f"coll {res['collectives']['total']/2**20:.1f} MiB/device, "
+        f"dominant={res['roofline']['dominant']}\n")
+
+
+def orchestrate(args):
+    done = set()
+    try:
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("ok"):
+                    done.add((r["arch"], r["shape"], r["multi_pod"]))
+    except FileNotFoundError:
+        pass
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    todo = [(a, s, mp)
+            for (a, s, _skip) in configs.cells()
+            for mp in meshes
+            if (a, s, mp) not in done]
+    print(f"{len(todo)} cells to run -> {args.out}")
+    for arch, shape, mp in todo:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape]
+        if mp:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        try:
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            if p.returncode == 0:
+                rec = json.loads(p.stdout.strip().splitlines()[-1])
+            else:
+                rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                       "ok": False, "error": p.stderr[-2000:]}
+        except subprocess.TimeoutExpired:
+            rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                   "ok": False, "error": f"timeout {args.timeout}s"}
+        rec["wall_s"] = round(time.time() - t0, 1)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        status = "OK " if rec.get("ok") else "FAIL"
+        print(f"[{status}] {arch:20s} {shape:12s} mp={mp} "
+              f"({rec['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Trip-count-aware cost analysis over partitioned HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE -- a while
+loop body (our scan-over-layers, microbatch scan, attention/CE chunk scans)
+contributes a single iteration, under-counting FLOPs/bytes by the trip count
+(~n_layers x).  This walker rebuilds per-computation costs bottom-up and
+multiplies while bodies by their trip count (parsed from the loop condition's
+``compare(counter, constant(N)), direction=LT``).
+
+Costs modelled:
+  * FLOPs: dot ops -- 2 * prod(result_shape) * prod(lhs contracting dims)
+    (fusion-internal dots included);
+  * bytes: result + operand bytes of real ops (parameters / GTEs / bitcasts /
+    tuples excluded; fusions counted at the fusion boundary, which matches
+    "HBM traffic" on a machine that keeps fusion temporaries on-chip);
+  * collectives: operand bytes per op type (same convention as dryrun).
+
+This is an HBM/FLOP *model*, not a measurement; EXPERIMENTS.md §Roofline
+cross-checks it against analytic 6ND model FLOPs per cell.
+"""
+
+from __future__ import annotations
+
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE = re.compile(r"(pred|[suf]\d+|bf16|c64)\[([\d,]*)\]")
+# "%name = TYPE opcode(" -- TYPE may be a tuple containing spaces; the
+# opcode is the first lowercase word directly followed by "(".
+_OP = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([a-z][a-z\-]*)\(")
+_CALLS = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"(?:true_computation|false_computation|branch_computations=\{[^}]*)=?%?([\w\.\-]+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _dims_list(type_str: str):
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[str]] = {}
+        self.entry = None
+        cur = None
+        for line in hlo_text.splitlines():
+            stripped = line.rstrip()
+            is_hdr = (stripped.endswith("{") and ") -> " in stripped
+                      and (stripped.startswith("%")
+                           or stripped.startswith("ENTRY")))
+            if is_hdr:
+                tok = stripped.split(" ")
+                name = (tok[1] if stripped.startswith("ENTRY")
+                        else tok[0]).lstrip("%")
+                if stripped.startswith("ENTRY"):
+                    self.entry = name
+                cur = name
+                self.comps[cur] = []
+            elif cur is not None and "=" in line:
+                self.comps[cur].append(line)
+        # symbol table: (comp, op name) -> result type string.  Needed
+        # because compiled.as_text() omits operand types inline.
+        self.types: dict[str, dict[str, str]] = {}
+        for comp, lines in self.comps.items():
+            tab = {}
+            for line in lines:
+                m = _OP.match(line)
+                if m:
+                    tab[m.group(1)] = m.group(2)
+            self.types[comp] = tab
+        self._memo: dict[str, tuple] = {}
+
+    # -- trip counts ---------------------------------------------------------
+
+    def trip_count(self, cond_comp: str) -> int:
+        """Loop trip count: the s32[] constant compared against the counter.
+
+        The compare may be wrapped in a fusion, so when no raw compare line
+        exists we take the max s32 constant in the condition computation
+        (conditions of lowered scans contain exactly the bound)."""
+        lines = self.comps.get(cond_comp, [])
+        consts = {}
+        for l in lines:
+            m = re.search(r"%?([\w\.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)", l)
+            if m:
+                consts[m.group(1)] = int(m.group(2))
+        for l in lines:
+            if "compare(" in l and "direction=LT" in l:
+                for name, val in consts.items():
+                    if name in l:
+                        return val
+        return max(consts.values()) if consts else 1
+
+    # -- per-computation cost -------------------------------------------------
+
+    def comp_cost(self, comp: str):
+        """Returns (flops, bytes, coll_bytes) of one execution of ``comp``."""
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = (0, 0, 0)  # cycle guard
+        flops = byts = coll = 0
+        for line in self.comps.get(comp, []):
+            m = _OP.match(line)
+            if not m:
+                continue
+            _name, rtype, opcode = m.groups()
+            operand_str = line[m.end() - 1:]
+            if opcode in _FREE_OPS:
+                continue
+            if opcode == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = _COND.search(line)
+                if mb and mc:
+                    trips = self.trip_count(mc.group(1))
+                    f, b, c = self.comp_cost(mb.group(1))
+                    fc, bc, cc = self.comp_cost(mc.group(1))
+                    flops += trips * (f + fc)
+                    byts += trips * (b + bc)
+                    coll += trips * (c + cc)
+                continue
+            if opcode == "conditional":
+                branches = re.findall(
+                    r"(?:true_computation|false_computation)=%?([\w\.\-]+)",
+                    line)
+                if "branch_computations" in line:
+                    seg = line.split("branch_computations={", 1)[1]
+                    seg = seg.split("}", 1)[0]
+                    branches += [b.strip().lstrip("%") for b in seg.split(",")]
+                costs = [self.comp_cost(b) for b in branches
+                         if b in self.comps]
+                if costs:
+                    f = max(c[0] for c in costs)
+                    b = max(c[1] for c in costs)
+                    c_ = max(c[2] for c in costs)
+                    flops += f
+                    byts += b
+                    coll += c_
+                continue
+            ob = self._operand_bytes(comp, operand_str)
+            if opcode in ("fusion", "call"):
+                mcal = _CALLS.search(line)
+                if mcal and mcal.group(1) in self.comps:
+                    f, b, c = self.comp_cost(mcal.group(1))
+                    flops += f          # fusion-internal dots still count
+                    coll += c
+                # fusion boundary bytes: result + operands, minus in-place
+                # aliasing: a fusion that passes a large operand through to
+                # an identically-shaped result (scan-stack dynamic-update-
+                # slice) touches only the updated slice, not the buffer.
+                rb = _shape_bytes(rtype)
+                o_types = self._operand_types(comp, operand_str)
+                aliased = next((t for t in o_types
+                                if t and rb > 0 and _shape_bytes(t) == rb),
+                               None)
+                is_dus = bool(mcal) and "dynamic-update-slice" in "".join(
+                    self.comps.get(mcal.group(1), []) if mcal else [])
+                if aliased is not None and is_dus:
+                    others = sum(_shape_bytes(t) for t in o_types
+                                 if t is not aliased)
+                    byts += 2 * others  # slice read+write ~ other operands
+                else:
+                    byts += rb + ob
+                continue
+            if opcode in _COLLECTIVES:
+                coll += ob
+                byts += _shape_bytes(rtype) + ob
+                continue
+            if opcode == "dot":
+                flops += self._dot_flops(comp, line, rtype, operand_str)
+            byts += _shape_bytes(rtype) + ob
+        self._memo[comp] = (flops, byts, coll)
+        return self._memo[comp]
+
+    def _operand_types(self, comp: str, operand_str: str):
+        # operands are the %names inside the call parens (first level)
+        paren = operand_str.split(")", 1)[0] if ")" in operand_str \
+            else operand_str
+        names = re.findall(r"%([\w\.\-]+)", paren)
+        tab = self.types.get(comp, {})
+        return [tab.get(n, "") for n in names]
+
+    def _operand_bytes(self, comp: str, operand_str: str) -> int:
+        inline = _shape_bytes(operand_str.split(")", 1)[0])
+        if inline:
+            return inline               # dump-style text with inline types
+        return sum(_shape_bytes(t) for t in self._operand_types(
+            comp, operand_str))
+
+    def _dot_flops(self, comp: str, line: str, rtype: str,
+                   operand_str: str) -> int:
+        out_elems = 1
+        for d in _dims_list(rtype):
+            out_elems *= d
+        mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        lhs_type = ""
+        mlhs = re.search(r"dot\((\(?[^,)]*?\[[\d,]*\][^,)]*)", line)
+        if mlhs:                         # dump-style inline type
+            lhs_type = mlhs.group(1)
+        else:
+            ts = self._operand_types(comp, operand_str)
+            lhs_type = ts[0] if ts else ""
+        lhs_dims = _dims_list(lhs_type)
+        if not (mcd and lhs_dims):
+            return 2 * out_elems
+        contract = 1
+        for idx in mcd.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+        return 2 * out_elems * contract
+
+    # -- public ----------------------------------------------------------------
+
+    def totals(self):
+        f, b, c = self.comp_cost(self.entry)
+        return {"flops": float(f), "bytes": float(b),
+                "collective_bytes": float(c)}
+
+
+def corrected_costs(hlo_text: str) -> dict:
+    return HloCostModel(hlo_text).totals()

@@ -1,0 +1,262 @@
+"""Attention: GQA / MQA, sliding-window, qk-norm, cross-attention, KV cache.
+
+Training/prefill uses a blockwise (flash-style) formulation: queries are
+processed in chunks with running max/sum softmax so the materialized score
+block is (chunk, S) instead of (S, S).  XLA keeps the chunk loop as a scan;
+on TPU the chunk matmuls hit the MXU at full tile occupancy.
+
+Decode uses a dense one-token attention over the KV cache (optionally a ring
+buffer of the last ``swa_window`` entries for sliding-window models).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.runtime import pspec
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg: ModelConfig, bias: bool | None = None):
+    d, dh = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    bias = cfg.qkv_bias if bias is None else bias
+    ks = L.split_keys(key, 6)
+    p = {
+        "wq": L.dense_init(ks[0], (d, nq, dh), cfg.pdt),
+        "wk": L.dense_init(ks[1], (d, nkv, dh), cfg.pdt),
+        "wv": L.dense_init(ks[2], (d, nkv, dh), cfg.pdt),
+        "wo": L.dense_init(ks[3], (nq, dh, d), cfg.pdt),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((nq, dh), cfg.pdt)
+        p["bk"] = jnp.zeros((nkv, dh), cfg.pdt)
+        p["bv"] = jnp.zeros((nkv, dh), cfg.pdt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), cfg.pdt)
+        p["k_norm"] = jnp.ones((dh,), cfg.pdt)
+    return p
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions, kv_x=None):
+    """Returns q (B,S,Hq,D), k,v (B,Skv,Hkv,D) with rope + qk-norm applied."""
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", kv_x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", kv_x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if "q_norm" in p:
+        q = L.rms_norm(q, p["q_norm"])
+        k = L.rms_norm(k, p["k_norm"])
+    q = pspec.shard(q, pspec.BATCH, None, pspec.MODEL, None)
+    k = pspec.shard(k, pspec.BATCH, None, pspec.MODEL, None)
+    v = pspec.shard(v, pspec.BATCH, None, pspec.MODEL, None)
+    if positions is not None:
+        if cfg.mrope:
+            q = L.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = L.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def repeat_kv(k, hq: int):
+    """Expand kv heads to the full query head count.
+
+    Keeps every einsum on an (B, S, Hq, D) layout whose head dim is always
+    divisible by the "model" mesh axis -- GQA's raw kv head count (2..8)
+    usually is not, and letting GSPMD discover that mid-graph reshards
+    activations to replicated-batch/head-split (observed: +55 GiB temps and
+    1.3 GiB of all-to-all per step on qwen3).  The repeat is free under TP:
+    each model shard materializes only its own head group.
+    """
+    hkv = k.shape[2]
+    if hkv == hq:
+        return k
+    return jnp.repeat(k, hq // hkv, axis=2)
+
+
+def blockwise_attn(q, k, v, *, causal: bool, chunk: int,
+                   window: int | None = None, q_offset: int = 0):
+    """Flash-style chunked attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    ``window``: sliding-window radius (keys older than ``window`` masked).
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill=0).
+    """
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]          # MLA: value head dim != qk head dim
+    k = repeat_kv(k, hq)
+    v = repeat_kv(v, hq)
+    q = q * (d ** -0.5)
+
+    qh = pspec.shard(q.transpose(0, 2, 1, 3),
+                     pspec.BATCH, pspec.MODEL, None, None)  # (B, H, S, D)
+    kh = pspec.shard(k.transpose(0, 2, 1, 3),
+                     pspec.BATCH, pspec.MODEL, None, None)
+    vh = pspec.shard(v.transpose(0, 2, 1, 3),
+                     pspec.BATCH, pspec.MODEL, None, None)
+
+    n_chunks = max(sq // chunk, 1)
+    chunk = sq // n_chunks
+    kv_pos = jnp.arange(skv)
+
+    # The chunk body is itself checkpointed so the (chunk, S) score block is
+    # re-materialized in the backward pass instead of being saved for every
+    # chunk -- the flash-attention memory profile, at XLA level.
+    @jax.checkpoint
+    def do_chunk(carry, i):
+        qc = jax.lax.dynamic_slice_in_dim(qh, i * chunk, chunk, axis=2)
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qc, kh,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.ones((chunk, skv), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = jnp.exp(s - m).astype(q.dtype)
+        num = jnp.einsum("bhqk,bhkd->bhqd", e, vh,
+                         preferred_element_type=jnp.float32)
+        den = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+        out = num / jnp.maximum(den, 1e-30)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(do_chunk, None, jnp.arange(n_chunks))
+    # outs: (n_chunks, B, H, chunk, Dv) -> (B, S, Hq, Dv)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, hq, dv)
+    return pspec.shard(out, pspec.BATCH, None, pspec.MODEL, None)
+
+
+def attn_block(x, p, cfg: ModelConfig, positions, *, causal=True,
+               kv_x=None, window=None):
+    q, k, v = _project_qkv(x, p, cfg, positions, kv_x=kv_x)
+    out = blockwise_attn(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                         window=window if window is not None else cfg.swa_window)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV cache)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KVLayout:
+    """Static description of a layer's KV cache."""
+
+    kv_len: int
+    n_kv_heads: int
+    head_dim: int
+
+
+def _quantize_heads(x):
+    """Per-(batch, pos, head) symmetric int8: x (B,S,H,D) -> (q, scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=False) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decode_attn_int8(x, p, cfg: ModelConfig, cache, pos, *, window=None):
+    """Single-token decode over an int8-quantized KV cache (§Perf C).
+
+    The cache stores int8 codes + per-(pos, head) scales; scores use a true
+    int8 x int8 -> int32 dot (the paper's thesis -- keep the in-memory
+    working set compressed and decode on access -- applied to attention:
+    the HBM read per step is 1 B/element instead of 2).
+    cache: dict with k/v int8 (B,S,Hkv,D) and k_scale/v_scale (B,S,Hkv).
+    Returns (out, new_cache_parts...).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32) if not cfg.mrope else \
+        jnp.broadcast_to(pos, (b, 3, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(x, p, cfg, positions)
+
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    d = cfg.head_dim
+    ck, cv = cache["k"], cache["v"]
+    s_cache = ck.shape[1]
+    slot = pos % s_cache if window else jnp.minimum(pos, s_cache - 1)
+    kq, ks = _quantize_heads(k)
+    vq, vs = _quantize_heads(v)
+    upd = jax.lax.dynamic_update_slice_in_dim
+    ck = upd(ck, kq, slot, axis=1)
+    cv = upd(cv, vq, slot, axis=1)
+    cks = upd(cache["k_scale"], ks, slot, axis=1)
+    cvs = upd(cache["v_scale"], vs, slot, axis=1)
+
+    qq, qs = _quantize_heads(q)                       # (B,1,Hq,D)
+    qg = qq.reshape(b, 1, hkv, g, d)
+    s_i32 = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.int32),
+                       ck.astype(jnp.int32))
+    qs_g = qs.reshape(b, 1, hkv, g)
+    s = s_i32.astype(jnp.float32) * \
+        jnp.einsum("bqhg,bkh->bhgqk", qs_g, cks) * (d ** -0.5)
+    kv_pos = jnp.arange(s_cache)
+    valid = (kv_pos <= pos) | (jnp.bool_(bool(window)) & (pos >= s_cache))
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd,bkh->bqhgd", a, cv.astype(jnp.float32),
+                     cvs)
+    out = out.reshape(b, 1, hq, d).astype(x.dtype)
+    return (jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype)),
+            {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs})
+
+
+def decode_attn(x, p, cfg: ModelConfig, cache_k, cache_v, pos, *,
+                window=None):
+    """Single-token decode.
+
+    x: (B, 1, d); cache_k/v: (B, S, Hkv, D); pos: int32[] current position.
+    Returns (out (B,1,d), new_k, new_v).  For sliding-window models the
+    cache is a ring buffer of size ``window`` (cache slot = pos % window).
+    """
+    b, _, _ = x.shape
+    s_cache = cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32) if not cfg.mrope else \
+        jnp.broadcast_to(pos, (b, 3, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(x, p, cfg, positions)
+
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    d = cfg.head_dim
+    slot = pos % s_cache if window else jnp.minimum(pos, s_cache - 1)
+    # Caches stay at hkv heads (no repeat: an 8x-repeated 32k cache is 8x
+    # the HBM traffic per step).  When hkv does not divide the model axis
+    # the cache is sequence-sharded instead (runtime/sharding.py) and the
+    # softmax reductions below become distributed max/sum.
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    qg = q.reshape(b, 1, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, cache_k,
+                   preferred_element_type=jnp.float32) * d ** -0.5
+    kv_pos = jnp.arange(s_cache)
+    if window:
+        # Ring buffer: every written slot holds one of the last `s_cache`
+        # positions, so all slots are valid once the buffer has wrapped;
+        # before that, only slots <= pos have been written.
+        valid = (kv_pos <= pos) | (pos >= s_cache)
+    else:
+        valid = kv_pos <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", a, cache_v).reshape(b, 1, hq, d)
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(x.dtype)), \
+        cache_k, cache_v

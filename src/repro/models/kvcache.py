@@ -1,0 +1,67 @@
+"""Compressed KV-cache blocks: the paper's in-memory-compression use case.
+
+Decode caches are large, cold beyond the active window, and tolerant of
+bounded error -- exactly the profile of the paper's RTM / GAMESS in-memory
+workloads.  ``compress_cache`` SZ-compresses (Lorenzo+Huffman) each cache
+tensor; ``decompress_cache`` restores it with the optimized parallel decoder
+(gap-array by default -- the encoder is ours, so coupling is free; see paper
+§V-C for the self-sync trade-off).
+
+Along the sequence axis a KV cache is smooth per channel (adjacent tokens'
+keys correlate), so the 1-D Lorenzo predictor applied along S gets ratios
+well above the raw-entropy floor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api as sz
+
+
+@dataclasses.dataclass
+class CompressedCache:
+    blobs: dict           # name -> core.sz.Compressed
+    orig_dtypes: dict
+    orig_shapes: dict
+
+    @property
+    def compressed_bytes(self) -> int:
+        return sum(c.compressed_bytes for c in self.blobs.values())
+
+    @property
+    def original_bytes(self) -> int:
+        return sum(int(np.prod(s)) * 2 for s in self.orig_shapes.values())
+
+    @property
+    def ratio(self) -> float:
+        return self.original_bytes / max(self.compressed_bytes, 1)
+
+
+def compress_cache(cache: dict, eb: float = 1e-3,
+                   skip: tuple = ()) -> CompressedCache:
+    """Compress every tensor of a decode cache (relative error bound).
+
+    The cache layout (L, B, S, H, D) is flattened with S innermost-adjacent
+    to channels so the Lorenzo predictor sees token-to-token continuity.
+    """
+    blobs, dts, shapes = {}, {}, {}
+    for name, arr in cache.items():
+        if name in skip:
+            continue
+        x = np.asarray(arr, np.float32)
+        blobs[name] = sz.compress(x, eb=eb, mode="rel")
+        dts[name] = str(arr.dtype)
+        shapes[name] = arr.shape
+    return CompressedCache(blobs, dts, shapes)
+
+
+def decompress_cache(cc: CompressedCache, method: str = "gap") -> dict:
+    out = {}
+    for name, blob in cc.blobs.items():
+        x = sz.decompress(blob, method=method)
+        out[name] = jnp.asarray(np.asarray(x), jnp.dtype(cc.orig_dtypes[name]))
+    return out

@@ -1,0 +1,113 @@
+"""Shared neural-net layers (pure functions over param dicts)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm with an f32 reduction but no f32 materialization of x.
+
+    Keeping x in bf16 end-to-end matters under remat: an ``x.astype(f32)``
+    at the top of a checkpointed layer makes XLA save the *converted* f32
+    copy of the (L, B, S, d) activation stack alongside the bf16 one
+    (observed 2x saved-activation HBM on every train cell)."""
+    dt = x.dtype
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps).astype(dt)
+    return x * inv[..., None] * scale.astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def gated_mlp(x, p, act: str = "silu"):
+    """SwiGLU-style MLP: (act(x Wg) * (x Wu)) Wd."""
+    a = act_fn(act)
+    h = a(x @ p["wg"].astype(x.dtype)) * (x @ p["wu"].astype(x.dtype))
+    return h @ p["wd"].astype(x.dtype)
+
+
+def mlp2(x, p, act: str = "gelu"):
+    """Plain 2-matrix MLP (whisper / starcoder2-style)."""
+    h = act_fn(act)(x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+def mlp_apply(x, p, act: str = "silu"):
+    """Dispatch on param keys: gated (wg/wu/wd) vs plain (wi/wo)."""
+    return gated_mlp(x, p, act) if "wg" in p else mlp2(x, p, act)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                         # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    sin = jnp.sin(ang)[..., None, :]                   # (..., S, 1, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float = 1e4):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (..., 3, S) -- temporal / height / width position ids.  The
+    rotary half-dims are partitioned into ``sections`` (summing to D/2); each
+    section rotates with its own position stream.  For pure-text tokens all
+    three streams are equal and this reduces to standard RoPE.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(d, theta)                          # (D/2,)
+    # Select the position stream per frequency slot.
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)       # (D/2,)
+    pos = jnp.moveaxis(positions3[..., sec_id, :], -2, -1)  # (..., S, D/2)
+    ang = pos.astype(jnp.float32) * inv
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,133 @@
+"""RWKV-6 ("Finch") blocks: time-mix with data-dependent per-channel decay.
+
+Per-channel decay forbids the SSD-style chunk factorization without log-space
+rescaling games (1/decay overflows f32 across a chunk), so training uses an
+exact per-step ``lax.scan`` over the sequence -- numerically identical to the
+recurrent decode path.  A Pallas chunked-GLA kernel is the production TPU
+path and is listed as a beyond-paper optimization in EXPERIMENTS.md §Perf.
+
+Recurrence (head h, channels i->k, j->v):
+  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+  y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+HEAD_DIM = 64
+
+
+def rwkv_dims(cfg: ModelConfig):
+    h = cfg.d_model // HEAD_DIM
+    return h, HEAD_DIM
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h, dh = rwkv_dims(cfg)
+    ks = L.split_keys(key, 8)
+    return {
+        "mix": 0.5 * jnp.ones((5, d), cfg.pdt),    # r,k,v,w,g token-shift mixes
+        "wr": L.dense_init(ks[0], (d, d), cfg.pdt),
+        "wk": L.dense_init(ks[1], (d, d), cfg.pdt),
+        "wv": L.dense_init(ks[2], (d, d), cfg.pdt),
+        "wg": L.dense_init(ks[3], (d, d), cfg.pdt),
+        "w0": -6.0 * jnp.ones((d,), jnp.float32),  # decay bias (w ~ exp(-exp(w0)))
+        "w_lora_a": L.dense_init(ks[4], (d, 64), cfg.pdt),
+        "w_lora_b": L.dense_init(ks[5], (64, d), cfg.pdt, scale=1e-2),
+        "u": jnp.zeros((h, dh), jnp.float32),      # per-head bonus
+        "wo": L.dense_init(ks[6], (d, d), cfg.pdt),
+        "ln_x": jnp.ones((d,), cfg.pdt),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = L.split_keys(key, 3)
+    return {
+        "mix": 0.5 * jnp.ones((2, d), cfg.pdt),
+        "wk": L.dense_init(ks[0], (d, ff), cfg.pdt),
+        "wv": L.dense_init(ks[1], (ff, d), cfg.pdt),
+        "wr": L.dense_init(ks[2], (d, d), cfg.pdt),
+    }
+
+
+def _token_shift(x, x_prev):
+    """shifted[t] = x[t-1]; x_prev fills t=0 (decode carry)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix_proj(x, xs, p, cfg):
+    d = cfg.d_model
+    mix = p["mix"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + (xs - x) * mix[i] for i in range(5))
+    r = xr @ p["wr"].astype(x.dtype)
+    k = xk @ p["wk"].astype(x.dtype)
+    v = xv @ p["wv"].astype(x.dtype)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    logw = -jnp.exp(
+        p["w0"] + (jnp.tanh(xw @ p["w_lora_a"].astype(x.dtype))
+                   @ p["w_lora_b"].astype(x.dtype)).astype(jnp.float32))
+    w = jnp.exp(logw)                                  # (B,S,d) in (0,1)
+    return r, k, v, g, w
+
+
+def time_mix(x, x_prev, state, p, cfg: ModelConfig, chunk: int = 64):
+    """x: (B,S,d); x_prev: (B,d) shift carry; state: (B,H,dk,dv) fp32.
+
+    The recurrence runs as a two-level scan: an outer checkpointed scan over
+    ``chunk``-step blocks (saving only block-boundary states -- S/chunk
+    states instead of S, which is what keeps the backward pass inside HBM)
+    with an exact inner per-step scan.  Returns (y, new_x_prev, new_state).
+    """
+    bsz, s, d = x.shape
+    h, dh = rwkv_dims(cfg)
+    xs = _token_shift(x, x_prev)
+    r, k, v, g, w = _time_mix_proj(x, xs, p, cfg)
+
+    rh = r.reshape(bsz, s, h, dh).astype(jnp.float32)
+    kh = k.reshape(bsz, s, h, dh).astype(jnp.float32)
+    vh = v.reshape(bsz, s, h, dh).astype(jnp.float32)
+    wh = w.reshape(bsz, s, h, dh)
+    u = p["u"]
+
+    def step(s_prev, inp):
+        rt, kt, vt, wt = inp                           # (B,H,dh)
+        kv = kt[..., :, None] * vt[..., None, :]       # (B,H,dk,dv)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s_prev + u[..., None] * kv)
+        s_new = wt[..., :, None] * s_prev + kv
+        return s_new, y
+
+    nc = max(s // chunk, 1)
+    cs = s // nc
+
+    def to_chunks(a):                                  # (B,S,H,dh)->(nc,cs,B,H,dh)
+        return jnp.moveaxis(a, 1, 0).reshape(nc, cs, bsz, h, dh)
+
+    seq = (to_chunks(rh), to_chunks(kh), to_chunks(vh), to_chunks(wh))
+
+    @jax.checkpoint
+    def chunk_fn(s_prev, inp):
+        return jax.lax.scan(step, s_prev, inp)
+
+    state, ys = jax.lax.scan(chunk_fn, state, seq)     # ys: (nc,cs,B,H,dh)
+    y = jnp.moveaxis(ys.reshape(s, bsz, h, dh), 0, 1).reshape(bsz, s, d)
+    y = y.astype(x.dtype)
+    y = L.rms_norm(y, p["ln_x"]) * g
+    y = y @ p["wo"].astype(x.dtype)
+    return y, x[:, -1], state
+
+
+def channel_mix(x, x_prev, p, cfg: ModelConfig):
+    xs = _token_shift(x, x_prev)
+    mix = p["mix"].astype(x.dtype)
+    xk = x + (xs - x) * mix[0]
+    xr = x + (xs - x) * mix[1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    return jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * (
+        k @ p["wv"].astype(x.dtype)), x[:, -1]

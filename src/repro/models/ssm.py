@@ -1,0 +1,155 @@
+"""Mamba2 (SSD) blocks -- chunked state-space duality formulation.
+
+The scalar-per-head decay makes the chunked algorithm numerically safe: all
+pairwise decay factors are exp(cumA_t - cumA_s) <= 1 for t >= s, so the
+(Q, Q) intra-chunk matrices never overflow (unlike per-channel-decay models,
+see rwkv.py).  Structure follows the Mamba2 paper's reference:
+
+  intra:  Y[t] += sum_{s<=t in chunk} (C_t . B_s) * exp(A[s+1..t]) * X[s]
+  state:  S_c   = sum_{s in chunk} exp(A[s+1..end]) * B_s (x) X_s
+  inter:  Y[t] += C_t . (decay * S_{c-1}) * exp(A[chunk_start..t])
+
+Decode keeps the (B, H, P, N) recurrent state: h = dA*h + dt*x (x) B.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def ssm_dims(cfg: ModelConfig):
+    p_head = 64
+    dv = 2 * cfg.d_model                      # expand factor 2
+    h = cfg.ssm_heads if cfg.ssm_heads else dv // p_head
+    p_head = dv // h
+    return dv, h, p_head
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    n = cfg.ssm_state
+    dv, h, _p = ssm_dims(cfg)
+    ks = L.split_keys(key, 4)
+    return {
+        # fused in-projection: [x (dv) | z (dv) | B (n) | C (n) | dt (h)]
+        "win": L.dense_init(ks[0], (d, 2 * dv + 2 * n + h), cfg.pdt),
+        "wout": L.dense_init(ks[1], (dv, d), cfg.pdt),
+        "a_log": jnp.zeros((h,), jnp.float32),       # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((dv,), cfg.pdt),
+    }
+
+
+def _segsum(a):
+    """Lower-triangular pairwise sums: out[t, s] = sum_{s < u <= t} a[u]."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x, b_in, c_in, dt, a, chunk: int):
+    """Chunked SSD.
+
+    x:  (B, S, H, P)   values
+    b_in, c_in: (B, S, N)  input/output projections (shared across heads)
+    dt: (B, S, H)      softplus'd step sizes
+    a:  (H,)           negative decay rates
+    Returns y: (B, S, H, P).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    # clamp the chunk to the sequence (short decode-consistency prompts)
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    q = chunk
+
+    xs = x.reshape(bsz, nc, q, h, p)
+    bs = b_in.reshape(bsz, nc, q, n)
+    cs = c_in.reshape(bsz, nc, q, n)
+    dts = dt.reshape(bsz, nc, q, h)
+    da = dts * a[None, None, None, :]                  # (B,nc,Q,H) log-decay
+    da = jnp.moveaxis(da, -1, -2)                      # (B,nc,H,Q)
+
+    # intra-chunk
+    lmat = jnp.exp(_segsum(da))                        # (B,nc,H,Q,Q)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cs, bs)         # (B,nc,Q,Q)
+    scores = cb[:, :, None] * lmat                     # (B,nc,H,Q,Q)
+    xdt = xs * dts[..., None]                          # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", scores, xdt)
+
+    # chunk states: S_c = sum_s exp(cum_end - cum_s) * dtB_s (x) X_s
+    cum = jnp.cumsum(da, axis=-1)                      # (B,nc,H,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)        # (B,nc,H,Q)
+    sstate = jnp.einsum("bchq,bcqn,bcqhp->bchnp",
+                        decay_to_end, bs, xdt)         # (B,nc,H,N,P)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[..., -1])                # (B,nc,H)
+
+    def step(carry, inp):
+        s_prev = carry
+        s_c, dec = inp
+        s_new = s_prev * dec[..., None, None] + s_c
+        return s_new, s_prev
+
+    sstate_t = jnp.moveaxis(sstate, 1, 0)              # (nc,B,H,N,P)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)          # (nc,B,H)
+    init = jnp.zeros_like(sstate_t[0])
+    _, s_prevs = jax.lax.scan(step, init, (sstate_t, decay_t))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)              # (B,nc,H,N,P) state entering chunk
+
+    # inter-chunk contribution
+    decay_in = jnp.exp(cum)                            # (B,nc,H,Q) decay from chunk start
+    y_inter = jnp.einsum("bcqn,bchq,bchnp->bcqhp", cs, decay_in, s_prevs)
+
+    return (y_intra + y_inter).reshape(bsz, s, h, p)
+
+
+def ssm_block(x, p, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d)."""
+    bsz, s, d = x.shape
+    n = cfg.ssm_state
+    dv, h, ph = ssm_dims(cfg)
+    proj = x @ p["win"].astype(x.dtype)
+    xv, z, b_in, c_in, dt = jnp.split(
+        proj, [dv, 2 * dv, 2 * dv + n, 2 * dv + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    xh = xv.reshape(bsz, s, h, ph)
+    y = ssd_scan(xh.astype(jnp.float32), b_in.astype(jnp.float32),
+                 c_in.astype(jnp.float32), dt, a, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, dv).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"])
+    return y @ p["wout"].astype(x.dtype)
+
+
+def ssm_decode(x, p, cfg: ModelConfig, state):
+    """Single-token decode.  state: (B, H, N, P) fp32."""
+    bsz, _, d = x.shape
+    n = cfg.ssm_state
+    dv, h, ph = ssm_dims(cfg)
+    proj = x[:, 0] @ p["win"].astype(x.dtype)
+    xv, z, b_in, c_in, dt = jnp.split(
+        proj, [dv, 2 * dv, 2 * dv + n, 2 * dv + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)                                          # (B,H)
+    xh = xv.reshape(bsz, h, ph).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    state = state * da[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", b_in.astype(jnp.float32), xdt)
+    y = jnp.einsum("bn,bhnp->bhp", c_in.astype(jnp.float32), state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, dv).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z[:, None]), p["norm"])
+    return y @ p["wout"].astype(x.dtype), state

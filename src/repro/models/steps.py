@@ -1,0 +1,182 @@
+"""train_step / serve_step -- the functions the launcher jits and shards."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as D
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.runtime import pspec
+
+MTP_WEIGHT = 0.3
+
+
+def cross_entropy(logits, labels):
+    """Mean next-token CE over valid (label >= 0) positions."""
+    valid = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - gold, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def chunked_softmax_xent(hidden, unembed, labels, seq_chunk: int = 1024):
+    """CE without materializing full (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's (B, c, V) logits live only
+    inside a checkpointed body.  Returns (sum_nll, n_valid).
+    """
+    b, s, d = hidden.shape
+    n_chunks = max(s // seq_chunk, 1)
+    c = s // n_chunks
+    hc = hidden[:, : n_chunks * c].reshape(b, n_chunks, c, d)
+    lc = labels[:, : n_chunks * c].reshape(b, n_chunks, c)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        h, lab = inp                       # (B, c, d), (B, c)
+        h = pspec.shard(h, pspec.BATCH, None, None)
+        logits = jnp.einsum("bcd,vd->bcv", h, unembed,
+                            preferred_element_type=jnp.float32)
+        logits = pspec.shard(logits, pspec.BATCH, None, pspec.MODEL)
+        valid = lab >= 0
+        safe = jnp.maximum(lab, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # Masked reduction instead of take_along_axis: a gather over the
+        # model-sharded vocab dim makes GSPMD all-gather full-vocab logits
+        # (9.3 GiB/chip on 152k vocab); the iota-mask reduces shard-locally.
+        vocab_iota = jnp.arange(logits.shape[-1], dtype=jnp.int32)
+        gold = jnp.sum(
+            jnp.where(vocab_iota[None, None, :] == safe[..., None],
+                      logits, 0.0), axis=-1)
+        nll = jnp.where(valid, lse - gold, 0.0)
+        s_nll, n_valid = carry
+        return (s_nll + nll.sum(), n_valid + valid.sum()), None
+
+    (s_nll, n_valid), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.int32(0)),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    # tail (if s % seq_chunk): fall back to direct computation
+    if n_chunks * c < s:
+        h_t = hidden[:, n_chunks * c:]
+        l_t = labels[:, n_chunks * c:]
+        logits = jnp.einsum("bcd,vd->bcv", h_t, unembed,
+                            preferred_element_type=jnp.float32)
+        valid = l_t >= 0
+        safe = jnp.maximum(l_t, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        s_nll = s_nll + jnp.where(valid, lse - gold, 0.0).sum()
+        n_valid = n_valid + valid.sum()
+    return s_nll, n_valid
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    hidden, aux = T.forward_hidden(params, batch["tokens"], cfg,
+                                   extra_embeds=batch.get("extra_embeds"))
+    unembed = params.get("unembed", params["embed"]).astype(hidden.dtype)
+    s_nll, n_valid = chunked_softmax_xent(hidden, unembed, batch["labels"])
+    loss = s_nll / jnp.maximum(n_valid, 1)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp and "mtp" in params:
+        # Reuse the pre-unembed hidden? Keep it simple: the MTP head runs on
+        # the embedding stream (cheap surrogate block; DESIGN.md §5).
+        hidden = params["embed"][batch["tokens"]].astype(cfg.cdt)
+        mlogits = T.mtp_logits(params, batch["tokens"], hidden, cfg)
+        mtp_labels = jnp.where(
+            batch["labels"] >= 0,
+            jnp.roll(batch["labels"], -1, axis=-1), -1).at[:, -1].set(-1)
+        mtp_loss = cross_entropy(mlogits, mtp_labels)
+        loss = loss + MTP_WEIGHT * mtp_loss
+        metrics["mtp"] = mtp_loss
+    return loss + aux, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    n_micro: int = 1, grad_shardings=None):
+    """Training step with optional gradient accumulation.
+
+    ``n_micro`` > 1 scans over micro-batches (leading batch dim split),
+    accumulating f32 grads -- divides every activation / remat-stack buffer
+    by n_micro at the cost of param-sized f32 accumulators.  Required to fit
+    the >=70B train cells on 16 GB v5e.
+
+    ``grad_shardings``: optional pytree of NamedShardings (the params'
+    shardings) pinned onto the accumulators; without it GSPMD is free to
+    replicate the f32 grad tree across the model axis (observed: +2.6
+    TiB/device on deepseek-v3).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, cfg)
+
+    def _pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (l, met), g = grads_of(params, mb)
+                acc = _pin(jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / n_micro,
+                    acc, g))
+                return acc, (l, met)
+
+            zeros = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            grads, (ls, mets) = jax.lax.scan(body, zeros, micro)
+            loss = ls.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), mets)
+        params, opt_state, opt_metrics = adamw.update(
+            grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch, cfg)
+        return metrics
+
+    return eval_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, token (B,1), cache, pos) -> logits, cache."""
+
+    def serve_step(params, token, cache, pos):
+        return D.forward_decode(params, token, cache, pos, cfg)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Prefill: run the training forward to produce logits for a prompt
+    (cache construction for the dense path is exercised by serve.py)."""
+
+    def prefill_step(params, tokens, extra_embeds=None):
+        logits, _ = T.forward(params, tokens, cfg, extra_embeds=extra_embeds)
+        return logits
+
+    return prefill_step

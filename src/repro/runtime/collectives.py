@@ -1,0 +1,126 @@
+"""Compressed collectives: error-feedback quantized gradient sync.
+
+The paper's thesis -- keep tensors entropy/precision-reduced while they move
+through a bandwidth-limited channel -- applied to the DP gradient reduction:
+
+  baseline  : all-reduce fp32          -> 8 B/param wire cost (2x traffic)
+  compressed: reduce-scatter bf16 (2B) -> quantize int8+scale (1B, error
+              feedback) -> all-gather int8  => ~3 B/param, 2.7x reduction
+
+Error feedback keeps the quantization residual per shard and folds it into
+the next step's gradient, which preserves SGD convergence (Karimireddy et
+al., 2019).  Exactness property tests live in tests/test_collectives.py.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_ef(x, residual, eb: float):
+    """Error-feedback int8 lattice quantization of a tensor.
+
+    Returns (codes int8, new_residual).  |dequant - (x + residual)| <= eb
+    wherever |x + residual| < 127 * 2eb; saturated mass stays in the
+    residual and re-enters next step.
+    """
+    target = x.astype(jnp.float32) + residual
+    q = jnp.clip(jnp.round(target / (2 * eb)), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * (2 * eb)
+    return q, target - deq
+
+
+def dequantize(q, eb: float):
+    return q.astype(jnp.float32) * (2 * eb)
+
+
+def compressed_psum_mean(g, axis_name: str, residual, eb: float = 0.0):
+    """Inside shard_map: mean-reduce ``g`` over ``axis_name`` with a
+    bf16 reduce-scatter + int8 all-gather wire format.
+
+    The int8 step uses a *dynamic per-shard scale* (max|shard|/127, shipped
+    alongside the codes -- 4 B per shard, negligible) so the scheme is
+    magnitude-free; ``eb`` > 0 optionally floors the scale, making the
+    per-element error bound explicit.  Error feedback keeps what rounding
+    drops.  g: local f32/bf16 gradient shard (same shape on every member).
+    Returns (mean_g f32, new_residual)."""
+    n = jax.lax.psum(1, axis_name)
+    flat = g.reshape(-1).astype(jnp.bfloat16)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros(pad, flat.dtype)])
+    # phase 1: bf16 reduce-scatter (each member owns 1/n of the sum)
+    mine = jax.lax.psum_scatter(flat, axis_name, scatter_dimension=0,
+                                tiled=True)
+    target = mine.astype(jnp.float32) / n + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(target)) / 127.0, eb)
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+    new_res = target - q.astype(jnp.float32) * scale
+    # phase 2: all-gather int8 codes + per-shard scales
+    gathered = jax.lax.all_gather(q, axis_name, axis=0, tiled=True)
+    scales = jax.lax.all_gather(scale[None], axis_name, axis=0, tiled=True)
+    per_elem = jnp.repeat(scales, gathered.shape[0] // scales.shape[0])
+    out = gathered.astype(jnp.float32) * per_elem
+    if pad:
+        out = out[:-pad]
+    return out.reshape(g.shape), new_res
+
+
+def make_dp_gradient_sync(mesh, eb: float = 1e-6):
+    """Returns (sync_fn, init_residuals) for explicit-DP training loops.
+
+    sync_fn(grads, residuals) -> (mean_grads, residuals); grads is a pytree
+    of *local* (per data shard) gradients.  Used by
+    examples/grad_compression_dp.py and the fault-tolerance integration
+    test; the GSPMD path quantifies the wire saving analytically in
+    EXPERIMENTS.md §Perf.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    n = mesh.shape["data"]
+
+    def residual_shape(g):
+        flat = g.size
+        return jnp.zeros(((flat + (-flat) % n) // n,), jnp.float32)
+
+    def init_residuals(grads):
+        return jax.tree.map(residual_shape, grads)
+
+    def _sync_one(g, r):
+        return compressed_psum_mean(g, "data", r, eb)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")))
+    def _sync_stacked(gs, rs):
+        out, nr = _sync_one(gs[0], rs[0])
+        return out[None], nr[None]
+
+    def sync(grads, residuals):
+        outs = []
+        new_res = []
+        for g, r in zip(jax.tree.leaves(grads), jax.tree.leaves(residuals)):
+            # one shard_map per leaf keeps specs simple; leaves are stacked
+            # over the data axis by the caller
+            o, nr = _sync_stacked(g, r)
+            outs.append(o)
+            new_res.append(nr)
+        tdef = jax.tree.structure(grads)
+        return tdef.unflatten(outs), tdef.unflatten(new_res)
+
+    return sync, init_residuals
+
+
+def wire_bytes(n_params: int, scheme: str) -> int:
+    """Analytic per-step DP wire traffic per member (ring algorithms)."""
+    if scheme == "allreduce_f32":
+        return 2 * 4 * n_params          # reduce-scatter + all-gather, fp32
+    if scheme == "allreduce_bf16":
+        return 2 * 2 * n_params
+    if scheme == "rs_bf16_ag_int8":
+        return 2 * n_params + 1 * n_params
+    raise ValueError(scheme)

@@ -1,0 +1,100 @@
+"""Fault tolerance: heartbeats, straggler mitigation, elastic re-mesh.
+
+This container has one host, so multi-host failure handling is expressed as
+mechanism + simulation hooks (exercised by tests/test_fault_tolerance.py):
+
+  * HeartbeatMonitor -- wall-clock heartbeats per worker; a worker silent for
+    ``timeout`` is declared dead.  On real clusters the transport is the
+    coordination service (jax.distributed / etcd); here it is injectable.
+  * StragglerMitigator -- per-step duration tracking; workers slower than
+    ``factor`` x median over a window are flagged.  Because the data pipeline
+    is counter-based (data/pipeline.py), a flagged worker's shard can be
+    reassigned by *renumbering shards*, no data motion needed.
+  * plan_elastic_remesh -- on node loss, shrink the "data" axis to the
+    largest feasible size and return the new DataConfig sharding; parameters
+    are FSDP-sharded over ("pod","data") so the restore path is a standard
+    checkpoint load with the new mesh (checkpoints store full arrays).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class WorkerState:
+    last_beat: float
+    step_times: list
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers, timeout: float = 60.0, clock=time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        self.workers = {w: WorkerState(clock(), []) for w in workers}
+
+    def beat(self, worker, step_time: float | None = None):
+        st = self.workers[worker]
+        st.last_beat = self.clock()
+        if step_time is not None:
+            st.step_times.append(step_time)
+            del st.step_times[:-32]
+
+    def dead(self):
+        now = self.clock()
+        return [w for w, st in self.workers.items()
+                if now - st.last_beat > self.timeout]
+
+
+class StragglerMitigator:
+    def __init__(self, factor: float = 2.0, window: int = 8):
+        self.factor = factor
+        self.window = window
+
+    def stragglers(self, monitor: HeartbeatMonitor):
+        med = self._median([
+            st.step_times[-1] for st in monitor.workers.values()
+            if st.step_times])
+        if med is None:
+            return []
+        out = []
+        for w, st in monitor.workers.items():
+            recent = st.step_times[-self.window:]
+            if len(recent) >= self.window // 2 and \
+                    self._median(recent) > self.factor * med:
+                out.append(w)
+        return out
+
+    @staticmethod
+    def _median(xs):
+        xs = sorted(xs)
+        return xs[len(xs) // 2] if xs else None
+
+
+def plan_elastic_remesh(n_alive: int, model_parallel: int = 16):
+    """Largest (data, model) mesh fitting ``n_alive`` chips, model fixed.
+
+    Returns (data, model) or None if even one model group does not fit.
+    Growing back after repair is the same operation in reverse; since the
+    data pipeline is counter-based, shard renumbering is free.
+    """
+    data = n_alive // model_parallel
+    if data < 1:
+        return None
+    # prefer powers of two for collective efficiency
+    p = 1
+    while p * 2 <= data:
+        p *= 2
+    return (p, model_parallel)
+
+
+def reassign_shards(n_shards: int, dead: list[int]) -> dict[int, int]:
+    """Deterministic shard reassignment: dead worker w's shard moves to
+    alive worker (w + k) % n; with counter-based data, the assignee simply
+    starts calling ``batch_at`` with the extra shard id."""
+    alive = [w for w in range(n_shards) if w not in dead]
+    mapping = {}
+    for i, w in enumerate(dead):
+        mapping[w] = alive[i % len(alive)]
+    return mapping

@@ -1,0 +1,22 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_book_and_stream(rng, n_syms=4000, vocab=1024, zipf=1.4, max_len=12,
+                         subseqs_per_seq=32):
+    """Shared helper: random codebook + encoded stream."""
+    from repro.core.huffman import codebook as cb, encode as he
+
+    freq = np.bincount(np.clip(rng.zipf(zipf, 30000), 0, vocab - 1),
+                       minlength=vocab)
+    book = cb.build_codebook(freq, max_len=max_len)
+    probs = freq / freq.sum()
+    syms = rng.choice(vocab, size=n_syms, p=probs).astype(np.uint16)
+    stream = he.encode(syms, book.enc_code, book.enc_len,
+                       subseqs_per_seq=subseqs_per_seq)
+    return book, syms, stream

@@ -1,0 +1,87 @@
+"""Codebook construction: package-merge optimality, canonical prefix codes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.huffman import codebook as cb
+
+
+def entropy_bits(freq):
+    p = freq[freq > 0] / freq.sum()
+    return float(-(p * np.log2(p)).sum())
+
+
+class TestPackageMerge:
+    def test_two_symbols(self):
+        lengths = cb.code_lengths_package_merge(np.array([5, 3]), 4)
+        assert list(lengths) == [1, 1]
+
+    def test_single_symbol(self):
+        lengths = cb.code_lengths_package_merge(np.array([0, 7, 0]), 4)
+        assert list(lengths) == [0, 1, 0]
+
+    def test_kraft_equality(self, rng):
+        freq = rng.integers(1, 1000, size=64)
+        lengths = cb.code_lengths_package_merge(freq, 12)
+        kraft = np.sum(0.5 ** lengths[lengths > 0].astype(float))
+        assert kraft <= 1.0 + 1e-12
+        # optimal codes saturate Kraft
+        assert kraft == pytest.approx(1.0)
+
+    def test_respects_max_len(self, rng):
+        # extreme skew would want very long tails without limiting
+        freq = (2 ** np.arange(20))[::-1]
+        for L in (6, 8, 12):
+            lengths = cb.code_lengths_package_merge(freq, L)
+            assert lengths.max() <= L
+
+    def test_near_entropy(self, rng):
+        freq = np.bincount(np.clip(rng.zipf(1.5, 20000), 0, 511),
+                           minlength=512)
+        lengths = cb.code_lengths_package_merge(freq, 12)
+        avg = (freq * lengths).sum() / freq.sum()
+        h = entropy_bits(freq)
+        assert h <= avg <= h + 1.05  # Huffman redundancy bound (~1 bit)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(0, 10000), min_size=2, max_size=128),
+           st.sampled_from([8, 10, 12]))
+    def test_property_valid_code(self, freqs, max_len):
+        freq = np.array(freqs)
+        if (freq > 0).sum() == 0 or (freq > 0).sum() > 2 ** max_len:
+            return
+        lengths = cb.code_lengths_package_merge(freq, max_len)
+        used = lengths[freq > 0]
+        if (freq > 0).sum() >= 2:
+            assert (used >= 1).all()
+        assert lengths.max() <= max_len
+        assert np.sum(0.5 ** used.astype(float)) <= 1.0 + 1e-12
+
+
+class TestCanonical:
+    def test_prefix_free(self, rng):
+        freq = rng.integers(0, 500, size=256)
+        freq[0] = 1  # ensure at least one
+        book = cb.build_codebook(freq, max_len=12)
+        codes = []
+        for s in np.nonzero(book.enc_len > 0)[0]:
+            bits = format(book.enc_code[s], f"0{book.enc_len[s]}b")
+            codes.append(bits)
+        codes.sort()
+        for a, b in zip(codes, codes[1:]):
+            assert not b.startswith(a), (a, b)
+
+    def test_lut_decodes_every_code(self, rng):
+        freq = rng.integers(1, 100, size=64)
+        book = cb.build_codebook(freq, max_len=10)
+        for s in range(64):
+            length = int(book.enc_len[s])
+            window = int(book.enc_code[s]) << (book.max_len - length)
+            assert book.dec_sym[window] == s
+            assert book.dec_len[window] == length
+
+    def test_min_starts_bound(self):
+        freq = np.ones(16, np.int64)
+        book = cb.build_codebook(freq, max_len=12)
+        assert book.min_starts_per_subseq(128) >= 9

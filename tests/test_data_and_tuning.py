@@ -1,0 +1,81 @@
+"""Data pipeline determinism + online tuning plan correctness."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.huffman import tuning
+from repro.data.pipeline import DataConfig, SyntheticLM, smooth_field
+
+from conftest import make_book_and_stream
+
+
+class TestDataPipeline:
+    def test_deterministic(self):
+        cfg = DataConfig(vocab=500, seq_len=32, global_batch=4, seed=3)
+        a = SyntheticLM(cfg).batch_at(7)
+        b = SyntheticLM(cfg).batch_at(7)
+        assert np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(b["tokens"]))
+
+    def test_steps_differ(self):
+        cfg = DataConfig(vocab=500, seq_len=32, global_batch=4)
+        d = SyntheticLM(cfg)
+        assert not np.array_equal(np.asarray(d.batch_at(0)["tokens"]),
+                                  np.asarray(d.batch_at(1)["tokens"]))
+
+    def test_shards_differ(self):
+        a = SyntheticLM(DataConfig(vocab=500, seq_len=32, global_batch=8,
+                                   n_shards=2, shard_id=0)).batch_at(0)
+        b = SyntheticLM(DataConfig(vocab=500, seq_len=32, global_batch=8,
+                                   n_shards=2, shard_id=1)).batch_at(0)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+    def test_labels_are_shifted_tokens(self):
+        d = SyntheticLM(DataConfig(vocab=100, seq_len=16, global_batch=2))
+        b = d.batch_at(0)
+        assert np.array_equal(np.asarray(b["labels"])[:, :-1],
+                              np.asarray(b["tokens"])[:, 1:])
+        assert (np.asarray(b["labels"])[:, -1] == -1).all()
+
+    def test_zipf_marginals_skewed(self):
+        d = SyntheticLM(DataConfig(vocab=1000, seq_len=256, global_batch=8,
+                                   mode="zipf"))
+        toks = np.asarray(d.batch_at(0)["tokens"]).reshape(-1)
+        counts = np.bincount(toks, minlength=1000)
+        assert counts[:10].sum() > counts[500:510].sum()
+
+    def test_smooth_field_compressible(self):
+        from repro.core import api
+        x = smooth_field((128, 128), seed=0)
+        assert api.compress(x, eb=1e-3).ratio > 2
+
+
+class TestTuningPlan:
+    def test_classify_matches_paper_groups(self):
+        ratios = jnp.asarray([0.5, 1.0, 1.5, 3.2, 8.0, 15.9])
+        cls = np.asarray(tuning.classify(ratios, t_high=8))
+        assert list(cls) == [1, 1, 2, 4, 8, 9]
+
+    def test_tile_for_class(self):
+        assert tuning.tile_for_class(1) == 1024
+        assert tuning.tile_for_class(4) == 4096
+        assert tuning.tile_for_class(9, t_high=8) == tuning.OVERFLOW_TILE
+
+    def test_plan_partitions_everything(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=20000)
+        plan = tuning.make_plan(stream, stream.seq_counts,
+                                stream.subseqs_per_seq)
+        n_seq = stream.n_seq
+        assert sorted(plan.seq_order.tolist()) == list(range(n_seq))
+        assert plan.class_start[-1] == n_seq
+        # class boundaries consistent with classes
+        cls_sorted = plan.classes[plan.seq_order]
+        assert (np.diff(cls_sorted) >= 0).all()
+
+    def test_ratio_range_maps_into_groups(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=20000)
+        ratios = tuning.sequence_ratios(stream.seq_counts,
+                                        stream.subseqs_per_seq)
+        r = np.asarray(ratios)
+        assert (r > 0).all() and (r <= 16.0 + 1e-6).all()

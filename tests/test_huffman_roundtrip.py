@@ -1,0 +1,142 @@
+"""Encode -> decode identity for every decoder variant (paper §III/IV)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.huffman import codebook as cb
+from repro.core.huffman import decode as hd
+from repro.core.huffman import encode as he
+from repro.core.huffman import tuning
+
+from conftest import make_book_and_stream
+
+
+def _luts(book):
+    return jnp.asarray(book.dec_sym), jnp.asarray(book.dec_len)
+
+
+class TestDecoders:
+    @pytest.mark.parametrize("zipf", [1.2, 1.5, 3.0])
+    @pytest.mark.parametrize("n", [37, 1000, 6001])
+    def test_sequential(self, rng, zipf, n):
+        book, syms, stream = make_book_and_stream(rng, n_syms=n, zipf=zipf)
+        ds, dl = _luts(book)
+        out = hd.decode_sequential(jnp.asarray(stream.units), ds, dl,
+                                   n_symbols=n, max_len=book.max_len)
+        assert np.array_equal(np.asarray(out), syms)
+
+    @pytest.mark.parametrize("use_tiles", [False, True])
+    def test_gap_array(self, rng, use_tiles):
+        book, syms, stream = make_book_and_stream(rng, n_syms=5000)
+        ds, dl = _luts(book)
+        out = hd.decode_gap_array(stream, ds, dl, book.max_len, len(syms),
+                                  use_tiles=use_tiles)
+        assert np.array_equal(np.asarray(out), syms)
+
+    @pytest.mark.parametrize("early_exit", [False, True])
+    def test_selfsync(self, rng, early_exit):
+        book, syms, stream = make_book_and_stream(rng, n_syms=5000)
+        ds, dl = _luts(book)
+        out = hd.decode_selfsync(stream, ds, dl, book.max_len, len(syms),
+                                 early_exit=early_exit)
+        assert np.array_equal(np.asarray(out), syms)
+
+    def test_selfsync_counts_match_gap(self, rng):
+        """Sync discovery must land on the same codeword boundaries the
+        encoder recorded in the gap array."""
+        book, syms, stream = make_book_and_stream(rng, n_syms=4000)
+        ds, dl = _luts(book)
+        units = jnp.asarray(stream.units)
+        n_sub = stream.gaps.shape[0]
+        start, _ = hd.selfsync_intra(units, ds, dl, stream.total_bits, n_sub,
+                                     book.max_len, stream.subseqs_per_seq)
+        start, _ = hd.selfsync_inter(units, ds, dl, start, stream.total_bits,
+                                     book.max_len, stream.subseqs_per_seq)
+        expected = (jnp.arange(n_sub) * 128 + stream.gaps.astype(jnp.int32))
+        # compare where the stream still has payload
+        valid = np.asarray(expected) < int(stream.total_bits)
+        assert np.array_equal(np.asarray(start)[valid],
+                              np.asarray(expected)[valid])
+
+    def test_chunked_baseline(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=3000)
+        ds, dl = _luts(book)
+        ch = he.encode_chunked(syms, book.enc_code, book.enc_len,
+                               chunk_symbols=512)
+        out = hd.decode_chunked(ch["units"], ch["chunk_bits"],
+                                ch["chunk_syms"], ds, dl,
+                                max_len=book.max_len, chunk_symbols=512)
+        assert np.array_equal(np.asarray(out).reshape(-1)[:3000], syms)
+
+    @pytest.mark.parametrize("tile", [1024, 2048, 4096])
+    def test_tile_sizes(self, rng, tile):
+        book, syms, stream = make_book_and_stream(rng, n_syms=9000)
+        ds, dl = _luts(book)
+        out = hd.decode_gap_array(stream, ds, dl, book.max_len, len(syms),
+                                  tile_syms=tile)
+        assert np.array_equal(np.asarray(out), syms)
+
+    def test_tuned(self, rng):
+        # mixed compressibility: skewed block + uniform block
+        a = rng.choice(1024, size=20000,
+                       p=np.r_[0.9, np.full(1023, 0.1 / 1023)])
+        b = rng.integers(0, 1024, 20000)
+        syms = np.concatenate([a, b]).astype(np.uint16)
+        freq = np.bincount(syms, minlength=1024)
+        book = cb.build_codebook(freq, max_len=12)
+        stream = he.encode(syms, book.enc_code, book.enc_len)
+        ds, dl = _luts(book)
+        starts = hd.gap_starts(stream)
+        bnds = jnp.arange(stream.gaps.shape[0], dtype=jnp.int32) * 128
+        _, counts = hd.subseq_scan(jnp.asarray(stream.units), ds, dl, starts,
+                                   bnds + 128, stream.total_bits, 12)
+        out = tuning.decode_tuned(stream, ds, dl, 12, len(syms), starts,
+                                  counts)
+        assert np.array_equal(np.asarray(out), syms)
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(1, 2000), st.integers(2, 200), st.integers(0, 2**31))
+    def test_property_roundtrip(self, n, vocab, seed):
+        r = np.random.default_rng(seed)
+        freq = r.integers(0, 50, size=vocab)
+        syms = r.integers(0, vocab, size=n).astype(np.uint16)
+        freq = np.maximum(freq, np.bincount(syms, minlength=vocab))
+        book = cb.build_codebook(freq, max_len=12)
+        stream = he.encode(syms, book.enc_code, book.enc_len)
+        ds, dl = _luts(book)
+        out = hd.decode_gap_array(stream, ds, dl, 12, n)
+        assert np.array_equal(np.asarray(out), syms)
+        out2 = hd.decode_selfsync(stream, ds, dl, 12, n)
+        assert np.array_equal(np.asarray(out2), syms)
+
+
+class TestEncoderMetadata:
+    def test_gap_points_to_codeword_start(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=2000)
+        lens = book.enc_len[syms].astype(np.int64)
+        starts = np.cumsum(lens) - lens
+        gaps = np.asarray(stream.gaps)
+        total = int(stream.total_bits)
+        for i in range(stream.gaps.shape[0]):
+            b = i * 128
+            if b >= total:
+                continue
+            nxt = starts[starts >= b]
+            if len(nxt) == 0:
+                continue
+            if nxt[0] - b > 255:
+                continue  # gap byte saturates in the padded tail region
+            assert b + int(gaps[i]) == nxt[0]
+
+    def test_counts_sum(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=2500)
+        assert int(np.asarray(stream.counts).sum()) == 2500
+        assert int(np.asarray(stream.seq_counts).sum()) == 2500
+
+    def test_compression_ratio_sane(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=8000, zipf=1.2)
+        bits = int(stream.total_bits)
+        assert bits < 16 * 8000  # beats raw uint16
+        assert bits >= 8000      # >= 1 bit per symbol

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.huffman import decode as hd
+from repro.kernels import ops, ref
+
+from conftest import make_book_and_stream
+
+
+def _luts(book):
+    return jnp.asarray(book.dec_sym), jnp.asarray(book.dec_len)
+
+
+class TestCountKernel:
+    @pytest.mark.parametrize("n", [500, 4096, 9001])
+    @pytest.mark.parametrize("zipf", [1.2, 2.0])
+    def test_matches_ref(self, rng, n, zipf):
+        book, syms, stream = make_book_and_stream(rng, n_syms=n, zipf=zipf)
+        ds, dl = _luts(book)
+        nss = stream.gaps.shape[0]
+        bnds = jnp.arange(nss, dtype=jnp.int32) * 128
+        starts = bnds + stream.gaps.astype(jnp.int32)
+        ck, _ = ops.subseq_counts(stream.units, ds, dl, starts, bnds + 128,
+                                  stream.total_bits, book.max_len)
+        cr, _ = ref.subseq_counts(stream.units, ds, dl, starts, bnds + 128,
+                                  stream.total_bits, book.max_len)
+        assert np.array_equal(np.asarray(ck), np.asarray(cr))
+        assert int(np.asarray(ck).sum()) == n
+
+
+class TestDecodeTilesKernel:
+    @pytest.mark.parametrize("tile", [1024, 3584, 4096])
+    def test_matches_ref(self, rng, tile):
+        book, syms, stream = make_book_and_stream(rng, n_syms=7000)
+        ds, dl = _luts(book)
+        nss = stream.gaps.shape[0]
+        bnds = jnp.arange(nss, dtype=jnp.int32) * 128
+        starts = bnds + stream.gaps.astype(jnp.int32)
+        _, counts = hd.subseq_scan(jnp.asarray(stream.units), ds, dl, starts,
+                                   bnds + 128, stream.total_bits,
+                                   book.max_len)
+        offsets = hd.output_offsets(counts)
+        ss_max = tile // ((128 - book.max_len) // book.max_len + 1) + 2
+        k = ops.decode_write_tiles(stream.units, ds, dl, starts, bnds + 128,
+                                   offsets, stream.total_bits, book.max_len,
+                                   7000, tile, ss_max)
+        r = ref.decode_write_tiles(stream.units, ds, dl, starts, bnds + 128,
+                                   offsets, stream.total_bits, book.max_len,
+                                   7000, tile, ss_max)
+        assert np.array_equal(np.asarray(k), np.asarray(r))
+        assert np.array_equal(np.asarray(k), syms)
+
+    def test_padded_baseline_matches(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=3000)
+        ds, dl = _luts(book)
+        nss = stream.gaps.shape[0]
+        bnds = jnp.arange(nss, dtype=jnp.int32) * 128
+        starts = bnds + stream.gaps.astype(jnp.int32)
+        out_k, c_k = ops.decode_padded_compact(
+            stream.units, ds, dl, starts, bnds + 128, stream.total_bits,
+            book.max_len, 3000)
+        out_r, c_r = ref.decode_padded_compact(
+            stream.units, ds, dl, starts, bnds + 128, stream.total_bits,
+            book.max_len, 3000)
+        assert np.array_equal(np.asarray(out_k), np.asarray(out_r))
+        assert np.array_equal(np.asarray(c_k), np.asarray(c_r))
+        assert np.array_equal(np.asarray(out_k), syms)
+
+
+class TestSelfsyncKernel:
+    @pytest.mark.parametrize("early_exit", [True, False])
+    def test_matches_ref(self, rng, early_exit):
+        book, syms, stream = make_book_and_stream(rng, n_syms=5000)
+        ds, dl = _luts(book)
+        nss = stream.gaps.shape[0]
+        s_k, c_k, _ = ops.selfsync_sync(
+            stream.units, ds, dl, stream.total_bits, nss,
+            stream.subseqs_per_seq, book.max_len, early_exit=early_exit)
+        s_r, c_r = ref.selfsync_sync(stream.units, ds, dl, stream.total_bits,
+                                     nss, stream.subseqs_per_seq,
+                                     book.max_len)
+        valid = np.asarray(s_r) < int(stream.total_bits)
+        assert np.array_equal(np.asarray(s_k)[valid], np.asarray(s_r)[valid])
+        assert np.array_equal(np.asarray(c_k), np.asarray(c_r))
+
+    def test_full_pipeline(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=4000)
+        ds, dl = _luts(book)
+        for method in ("gap", "selfsync"):
+            out = ops.decode_pipeline(stream, ds, dl, book.max_len,
+                                      len(syms), method=method)
+            assert np.array_equal(np.asarray(out), syms), method
+        out = ops.decode_pipeline(stream, ds, dl, book.max_len, len(syms),
+                                  method="gap", tuned=True)
+        assert np.array_equal(np.asarray(out), syms)
+
+
+class TestHistogramKernel:
+    @pytest.mark.parametrize("nbins", [16, 1024])
+    @pytest.mark.parametrize("n", [100, 65536, 70000])
+    def test_matches_ref(self, rng, nbins, n):
+        x = jnp.asarray(rng.integers(0, nbins, size=n).astype(np.int32))
+        assert np.array_equal(np.asarray(ops.histogram(x, nbins)),
+                              np.asarray(ref.histogram(x, nbins)))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 3000), st.integers(2, 64), st.integers(0, 2**31))
+    def test_property(self, n, nbins, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.integers(0, nbins, size=n).astype(np.int32))
+        h = np.asarray(ops.histogram(x, nbins))
+        assert h.sum() == n
+        assert np.array_equal(h, np.bincount(np.asarray(x),
+                                             minlength=nbins))
+
+
+class TestLorenzoKernels:
+    @pytest.mark.parametrize("n", [4096, 8192, 20480])
+    @pytest.mark.parametrize("eb", [1e-2, 1e-3])
+    def test_quantize_matches_ref(self, rng, n, eb):
+        x = jnp.asarray(np.cumsum(rng.standard_normal(n)).astype(np.float32)
+                        * 0.1)
+        c_k, o_k, r_k = ops.lorenzo_quantize(x, eb)
+        c_r, o_r, r_r = ref.lorenzo_quantize(x, eb)
+        assert np.array_equal(np.asarray(c_k), np.asarray(c_r))
+        assert np.array_equal(np.asarray(o_k), np.asarray(o_r))
+        assert np.array_equal(np.asarray(r_k), np.asarray(r_r))
+
+    def test_reconstruct_roundtrip(self, rng):
+        n, eb = 8192, 1e-3
+        x = np.cumsum(rng.standard_normal(n)).astype(np.float32) * 0.1
+        _, _, resid = ops.lorenzo_quantize(jnp.asarray(x), eb)
+        xr = ops.lorenzo_reconstruct(resid, eb)
+        assert np.abs(np.asarray(xr) - x).max() <= eb + np.spacing(
+            np.float32(np.abs(x).max())) * 2
+
+    def test_reconstruct_matches_ref(self, rng):
+        n = 12288
+        d = jnp.asarray(rng.integers(-3, 4, size=n).astype(np.int32))
+        k = ops.lorenzo_reconstruct(d, 1e-3)
+        r = ref.lorenzo_reconstruct(d, 1e-3, shape=(n,))
+        assert np.allclose(np.asarray(k), np.asarray(r), rtol=1e-6)

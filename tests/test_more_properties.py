@@ -1,0 +1,81 @@
+"""Additional property suites: chunked encoder, tuner invariance, kv quant."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.huffman import codebook as cb
+from repro.core.huffman import decode as hd
+from repro.core.huffman import encode as he
+from repro.core.huffman import tuning
+
+
+class TestChunkedEncoderProperty:
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(100, 3000), st.sampled_from([64, 512, 1000]),
+           st.integers(0, 2**31))
+    def test_roundtrip_any_chunk(self, n, chunk, seed):
+        r = np.random.default_rng(seed)
+        syms = r.integers(0, 300, size=n).astype(np.uint16)
+        freq = np.bincount(syms, minlength=300)
+        book = cb.build_codebook(freq, max_len=12)
+        ch = he.encode_chunked(syms, book.enc_code, book.enc_len,
+                               chunk_symbols=chunk)
+        out = hd.decode_chunked(ch["units"], ch["chunk_bits"],
+                                ch["chunk_syms"], jnp.asarray(book.dec_sym),
+                                jnp.asarray(book.dec_len),
+                                max_len=12, chunk_symbols=chunk)
+        assert np.array_equal(np.asarray(out).reshape(-1)[:n], syms)
+
+    def test_chunk_padding_costs_ratio(self, rng):
+        """Smaller chunks => more unit-alignment padding (paper §III-A)."""
+        syms = rng.integers(0, 64, size=20000).astype(np.uint16)
+        freq = np.bincount(syms, minlength=64)
+        book = cb.build_codebook(freq, max_len=10)
+        small = he.encode_chunked(syms, book.enc_code, book.enc_len, 128)
+        large = he.encode_chunked(syms, book.enc_code, book.enc_len, 8192)
+        assert small["stored_bytes"] >= large["stored_bytes"]
+
+
+class TestTunerInvariance:
+    @pytest.mark.parametrize("t_high", [4, 8, 12])
+    def test_output_independent_of_t_high(self, rng, t_high):
+        from conftest import make_book_and_stream
+        book, syms, stream = make_book_and_stream(rng, n_syms=8000)
+        ds, dl = jnp.asarray(book.dec_sym), jnp.asarray(book.dec_len)
+        starts = hd.gap_starts(stream)
+        bnds = jnp.arange(stream.gaps.shape[0], dtype=jnp.int32) * 128
+        _, counts = hd.subseq_scan(jnp.asarray(stream.units), ds, dl,
+                                   starts, bnds + 128, stream.total_bits,
+                                   book.max_len)
+        out = tuning.decode_tuned(stream, ds, dl, book.max_len, len(syms),
+                                  starts, counts, t_high=t_high)
+        assert np.array_equal(np.asarray(out), syms)
+
+
+class TestKVQuantFamilywide:
+    @pytest.mark.parametrize("arch", ["qwen3-0.6b", "qwen2.5-3b",
+                                      "h2o-danube-1.8b", "qwen2-vl-72b"])
+    def test_int8_kv_decode_close(self, arch):
+        from repro import configs
+        from repro.models import decode as D, steps as S, transformer as T
+
+        cfg = configs.get_config(arch).reduced(n_layers=2)
+        cfg_q = dataclasses.replace(cfg, kv_quant=True)
+        params = T.init_model(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0,
+                                  cfg.vocab)
+        cache_a = D.init_cache(cfg, 1, 16)
+        cache_b = D.init_cache(cfg_q, 1, 16)
+        sa, sb = S.make_serve_step(cfg), S.make_serve_step(cfg_q)
+        for t in range(8):
+            la, cache_a = sa(params, toks[:, t:t + 1], cache_a, jnp.int32(t))
+            lb, cache_b = sb(params, toks[:, t:t + 1], cache_b, jnp.int32(t))
+        a = np.asarray(la[0, 0], np.float32)
+        b = np.asarray(lb[0, 0], np.float32)
+        assert a.argmax() == b.argmax()
+        assert np.abs(a - b).max() < 0.25, np.abs(a - b).max()

@@ -1,0 +1,68 @@
+"""AdamW (fp32 + int8 block-quantized state) behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw
+
+
+def quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("state_dtype", ["float32", "int8"])
+def test_converges_on_quadratic(state_dtype):
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0,
+                            state_dtype=state_dtype)
+    params = {"w": jnp.zeros((130,)), "b": jnp.ones((257,))}
+    state = adamw.init(params, cfg)
+    for _ in range(300):
+        grads = jax.grad(quad_loss)(params)
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    assert float(quad_loss(params)) < 1e-2
+
+
+def test_int8_tracks_fp32():
+    params = {"w": jnp.linspace(-1, 1, 256)}
+    g = {"w": jnp.ones((256,)) * 0.1}
+    cfg32 = adamw.AdamWConfig(lr=1e-2, weight_decay=0.0)
+    cfg8 = adamw.AdamWConfig(lr=1e-2, weight_decay=0.0, state_dtype="int8")
+    p32, s32 = dict(params), adamw.init(params, cfg32)
+    p8, s8 = dict(params), adamw.init(params, cfg8)
+    for _ in range(20):
+        p32, s32, _ = adamw.update(g, s32, p32, cfg32)
+        p8, s8, _ = adamw.update(g, s8, p8, cfg8)
+    diff = np.abs(np.asarray(p32["w"]) - np.asarray(p8["w"])).max()
+    assert diff < 5e-3, diff
+
+
+def test_quantize_state_bounds():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 1024)),
+                    jnp.float32)
+    s = adamw.quantize_state(x)
+    assert s["q"].dtype == jnp.int8
+    assert s["q"].shape == x.shape          # param-shaped (sharding parity)
+    back = adamw.dequantize_state(s, (8, 1024))
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert err.max() <= np.abs(np.asarray(x)).max() / 127 + 1e-7
+
+
+def test_quantize_state_fallback_f32():
+    # last dim not a multiple of 128 -> exact f32 fallback
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(1000),
+                    jnp.float32)
+    s = adamw.quantize_state(x)
+    assert "f" in s
+    assert np.array_equal(np.asarray(adamw.dequantize_state(s, (1000,))),
+                          np.asarray(x))
+
+
+def test_grad_clip():
+    cfg = adamw.AdamWConfig(lr=1e-3, grad_clip=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init(params, cfg)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, m = adamw.update(huge, state, params, cfg)
+    assert float(m["grad_norm"]) > 1e5  # reported pre-clip

@@ -1,0 +1,62 @@
+"""Sharding rules: divisibility-safety for every arch's param tree (runs on
+an 8-device forced topology in a subprocess; jit-argument shardings must
+divide exactly)."""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SUB = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    from repro import configs
+    from repro.models import transformer as T, decode as D
+    from repro.runtime import sharding as shd
+    from repro.optim import adamw
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    bad = []
+    for arch, cfg in configs.REGISTRY.items():
+        ps = jax.eval_shape(lambda c=cfg: T.init_model(jax.random.PRNGKey(0), c))
+        shards = shd.param_shardings(ps, mesh)
+
+        def check(kp, x, s):
+            spec = s.spec
+            for i, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                n = 1
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    n *= mesh.shape[a]
+                if x.shape[i] % n != 0:
+                    bad.append((arch, str(kp), x.shape, str(spec)))
+
+        jax.tree_util.tree_map_with_path(check, ps, shards)
+        # opt state
+        ocfg = adamw.AdamWConfig(state_dtype="int8")
+        os_ = jax.eval_shape(lambda p=ps: adamw.init(p, ocfg), )
+        oshards = shd.opt_state_shardings(os_, mesh)
+        jax.tree_util.tree_map_with_path(check, os_, oshards)
+        # decode caches
+        cs = {k: jax.ShapeDtypeStruct(shape, dt)
+              for k, (shape, dt) in D.cache_spec(cfg, 8, 256).items()}
+        cshards = shd.cache_shardings(cs, mesh)
+        jax.tree_util.tree_map_with_path(check, cs, cshards)
+    print(json.dumps({"bad": bad[:10], "n_bad": len(bad)}))
+""")
+
+
+def test_all_param_specs_divide():
+    p = subprocess.run([sys.executable, "-c", SUB], capture_output=True,
+                       text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert p.returncode == 0, p.stderr[-2000:]
+    out = json.loads(p.stdout.strip().splitlines()[-1])
+    assert out["n_bad"] == 0, out["bad"]
