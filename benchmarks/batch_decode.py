@@ -1,0 +1,57 @@
+"""Batched multi-tensor decode: per-tensor tuned decode vs decode_batch.
+
+The serving-scale scenario (ROADMAP north star): a checkpoint of N shards
+or a KV cache of N blocks restores through the Huffman decoder.  Per-tensor
+tuned decoding launches one decode-write dispatch per (tensor, CR class);
+``pipeline.decode_batch`` gathers same-class sequences of ALL tensors into
+one dispatch per class.  Reported: wall time of both paths and the dispatch
+counts from the backend registry.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common as Cm
+from benchmarks import datasets as DS
+from repro.core import api
+from repro.core.huffman import pipeline as hp
+
+
+def run(n: int = DS.DEFAULT_N, quick: bool = False):
+    rows = []
+    names = ["HACC", "Nyx"] if quick else list(DS.PAPER_RATIOS)
+    shard_n = max(n // 8, 1 << 14)
+    for name in names:
+        # N shards of one dataset (a sharded checkpoint of that field).
+        n_shards = 4 if quick else 8
+        cs = []
+        for s in range(n_shards):
+            x, _ = DS.make_dataset(name, shard_n)
+            cs.append(api.compress(x, eb=1e-3, mode="rel"))
+        streams = [c.stream for c in cs]
+        books = [c.codebook for c in cs]
+        n_outs = [c.n_symbols for c in cs]
+        plans = [hp.build_plan(s, b) for s, b in zip(streams, books)]
+        be = hp.get_backend("ref")
+
+        def run_per_tensor():
+            return [hp.decode(s, b, n_o, plan=p, strategy="tuned")
+                    for s, b, n_o, p in zip(streams, books, n_outs, plans)]
+
+        def run_batched():
+            return hp.decode_batch(streams, books, n_outs, plans=plans)
+
+        be.reset_stats()
+        run_per_tensor()
+        d_per = be.stats["decode_write_dispatches"]
+        be.reset_stats()
+        run_batched()
+        d_batch = be.stats["decode_write_dispatches"]
+
+        t_per = Cm.timeit(run_per_tensor)
+        t_batch = Cm.timeit(run_batched)
+        qb = sum(c.quant_code_bytes for c in cs)
+        rows.append((f"batch/{name}/per_tensor_x{n_shards}", t_per * 1e6,
+                     f"GBps={Cm.gbps(qb, t_per):.3f};dispatches={d_per}"))
+        rows.append((f"batch/{name}/decode_batch_x{n_shards}", t_batch * 1e6,
+                     f"GBps={Cm.gbps(qb, t_batch):.3f};dispatches={d_batch}"))
+    return rows

@@ -11,8 +11,7 @@ import numpy as np
 from repro.core import api
 from repro.core.huffman import decode as hd
 from repro.core.huffman import encode as he
-from repro.core.huffman import tuning
-from repro.core.huffman.bits import SUBSEQ_BITS
+from repro.core.huffman import pipeline as hp
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
@@ -56,49 +55,43 @@ def decode_baseline_cusz(compressed, chunk_symbols: int = 16384):
     return run, ch["stored_bytes"]
 
 
-def make_variant(compressed, variant: str):
+# (method, strategy, early_exit) per paper Table V variant.
+_VARIANTS = {
+    "ori_selfsync": ("selfsync", "padded", False),
+    "opt_selfsync": ("selfsync", "tile", True),
+    "ori_gap": ("gap", "padded", True),
+    "opt_gap": ("gap", "tile", True),
+    "tuned_gap": ("gap", "tuned", True),
+}
+
+
+def make_variant(compressed, variant: str, backend: str = "ref"):
     """variant in {ori_selfsync, opt_selfsync, ori_gap, opt_gap, tuned_gap}.
 
     "ori_*"  = padded per-subsequence writes + gather compaction (the
                original decoders' uncoalesced-write cost structure) and, for
                self-sync, worst-case fixed sync rounds;
-    "opt_*"  = VMEM-staged output tiles (paper Alg. 1) + early-exit sync.
+    "opt_*"  = VMEM-staged output tiles (paper Alg. 1) + early-exit sync;
+    "tuned_*" = per-CR-class tiles (paper Alg. 2), plan prebuilt (the tuner's
+               classify/sort cost is timed separately in tableII).
+
+    Every variant runs through the unified ``pipeline.decode`` entry point;
+    ``backend`` selects "ref" (jnp) or "pallas" (kernels).
     """
-    c = compressed
-    book = c.codebook
-    ds, dl = luts(book)
-    n = c.n_symbols
-    stream = c.stream
-
-    if variant == "ori_selfsync":
-        def run():
-            return hd.decode_selfsync(stream, ds, dl, book.max_len, n,
-                                      use_tiles=False, early_exit=False)
-    elif variant == "opt_selfsync":
-        def run():
-            return hd.decode_selfsync(stream, ds, dl, book.max_len, n,
-                                      use_tiles=True, early_exit=True)
-    elif variant == "ori_gap":
-        def run():
-            return hd.decode_gap_array(stream, ds, dl, book.max_len, n,
-                                       use_tiles=False)
-    elif variant == "opt_gap":
-        def run():
-            return hd.decode_gap_array(stream, ds, dl, book.max_len, n,
-                                       use_tiles=True)
-    elif variant == "tuned_gap":
-        starts = hd.gap_starts(stream)
-        nss = stream.gaps.shape[0]
-        bnds = jnp.arange(nss, dtype=jnp.int32) * SUBSEQ_BITS
-        _, counts = hd.subseq_scan(jnp.asarray(stream.units), ds, dl, starts,
-                                   bnds + SUBSEQ_BITS, stream.total_bits,
-                                   book.max_len)
-
-        def run():
-            return tuning.decode_tuned(stream, ds, dl, book.max_len, n,
-                                       starts, counts)
-    else:
+    if variant not in _VARIANTS:
         raise ValueError(variant)
+    method, strategy, early_exit = _VARIANTS[variant]
+    c = compressed
+    stream, book, n = c.stream, c.codebook, c.n_symbols
+    plan = None
+    if strategy == "tuned":
+        plan = hp.build_plan(stream, book, method=method, backend=backend)
+
+    def run():
+        return hp.decode(stream, book, n, plan=plan, method=method,
+                         strategy=strategy, backend=backend,
+                         early_exit=early_exit)
+
     return run
 
 

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from benchmarks import common as Cm
 from benchmarks import datasets as DS
 from repro.core.huffman import decode as hd
-from repro.core.huffman import tuning
+from repro.core.huffman import pipeline as hp
 from repro.core.huffman.bits import SUBSEQ_BITS
 
 
@@ -48,7 +48,7 @@ def run(n: int = DS.DEFAULT_N, quick: bool = False):
                                    bnds + SUBSEQ_BITS, stream.total_bits,
                                    book.max_len)
         offsets = hd.output_offsets(counts)
-        ss_max = 4096 // ((SUBSEQ_BITS - book.max_len) // book.max_len + 1) + 2
+        ss_max = hp.ss_max_for_tile(4096, book.max_len)
         t_dw = Cm.timeit(
             lambda: hd.decode_write_tiles(
                 units, ds, dl, bnds + stream.gaps.astype(jnp.int32),
@@ -56,9 +56,9 @@ def run(n: int = DS.DEFAULT_N, quick: bool = False):
                 c.n_symbols, 4096, ss_max))
         # tuning overhead (classify/hist/sort/plan)
         t_tune = Cm.timeit(
-            lambda: tuning.sort_by_class(tuning.classify(
-                tuning.sequence_ratios(stream.seq_counts,
-                                       stream.subseqs_per_seq))))
+            lambda: hp.sort_by_class(hp.classify(
+                hp.sequence_ratios(stream.seq_counts,
+                                   stream.subseqs_per_seq))))
 
         for phase, t in [("intra_seq_sync", t_intra),
                          ("inter_seq_sync", t_inter),

@@ -21,13 +21,14 @@ def main() -> None:
                     help="subset of datasets / sizes (CI mode)")
     ap.add_argument("--only", default=None,
                     help="comma list: tableI,tableII,tableIV,tableV,"
-                         "fig2,fig4,arch,roofline")
+                         "fig2,fig4,batch,arch,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (arch_step, compression_ratio, cr_sensitivity,
-                            decode_throughput, decoder_phases,
-                            e2e_decompression, roofline, shmem_tuning)
+    from benchmarks import (arch_step, batch_decode, compression_ratio,
+                            cr_sensitivity, decode_throughput,
+                            decoder_phases, e2e_decompression, roofline,
+                            shmem_tuning)
 
     suites = [
         ("tableV", decode_throughput.run),
@@ -36,6 +37,7 @@ def main() -> None:
         ("tableI", shmem_tuning.run),
         ("fig2", cr_sensitivity.run),
         ("fig4", e2e_decompression.run),
+        ("batch", batch_decode.run),
         ("arch", arch_step.run),
         ("roofline", roofline.run),
     ]

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from benchmarks import common as Cm
 from benchmarks import datasets as DS
 from repro.core.huffman import decode as hd
-from repro.core.huffman import tuning
+from repro.core.huffman import pipeline as hp
 from repro.core.huffman.bits import SUBSEQ_BITS
 
 SIZES = list(range(1024, 8193, 512))
@@ -40,8 +40,7 @@ def run(n: int = DS.DEFAULT_N, quick: bool = False):
 
         per_size = {}
         for tile in sizes:
-            ss_max = tile // ((SUBSEQ_BITS - book.max_len)
-                              // book.max_len + 1) + 2
+            ss_max = hp.ss_max_for_tile(tile, book.max_len)
             t = Cm.timeit(lambda tile=tile, ss=ss_max: hd.decode_write_tiles(
                 units, ds, dl, starts, bnds + SUBSEQ_BITS, offsets,
                 stream.total_bits, book.max_len, c.n_symbols, tile, ss))
@@ -49,11 +48,11 @@ def run(n: int = DS.DEFAULT_N, quick: bool = False):
         best = min(per_size, key=per_size.get)
         worst = max(per_size, key=per_size.get)
 
-        t_tuned = Cm.timeit(lambda: tuning.decode_tuned(
+        t_tuned = Cm.timeit(lambda: hp.execute_tuned(
             stream, ds, dl, book.max_len, c.n_symbols, starts, counts))
-        t_plan = Cm.timeit(lambda: tuning.sort_by_class(tuning.classify(
-            tuning.sequence_ratios(stream.seq_counts,
-                                   stream.subseqs_per_seq))))
+        t_plan = Cm.timeit(lambda: hp.sort_by_class(hp.classify(
+            hp.sequence_ratios(stream.seq_counts,
+                               stream.subseqs_per_seq))))
 
         g_best = Cm.gbps(qb, per_size[best])
         g_worst = Cm.gbps(qb, per_size[worst])

@@ -26,9 +26,21 @@ def main():
               f"(bound {c.eb_effective:.3e}) "
           f"{'OK' if err <= c.eb_effective else 'VIOLATION'}")
 
-    # kernel path (Pallas, interpret mode on CPU)
-    xh = np.asarray(api.decompress(c, method="gap", use_kernels=True))
-    print(f"decompress[pallas-gap]: max err {np.abs(xh - x).max():.3e}")
+    # kernel path (Pallas, interpret mode on CPU), tuned per-CR-class tiles
+    xh = np.asarray(api.decompress(c, method="gap", backend="pallas",
+                                   tuned=True))
+    print(f"decompress[pallas-tuned]: max err {np.abs(xh - x).max():.3e}")
+
+    # batched multi-tensor decode: one decode-write dispatch per CR class
+    # across all tensors (how checkpoint shards / KV blocks restore).
+    shards = [api.compress(smooth_field((128, 512), seed=s), eb=1e-3)
+              for s in range(4)]
+    be = api.get_backend("ref")
+    be.reset_stats()
+    outs = api.decompress_batch(shards)
+    print(f"decompress_batch[4 shards]: "
+          f"{be.stats['decode_write_dispatches']} class dispatches, "
+          f"max err {max(float(np.abs(np.asarray(o) - smooth_field((128, 512), seed=s)).max()) for s, o in enumerate(outs)):.3e}")
 
 
 if __name__ == "__main__":

@@ -73,7 +73,8 @@ def _save_blob(path, arr, eb):
     )
 
 
-def _load_blob(path, method="gap"):
+def _read_blob(path):
+    """Parse a .szblob.npz into (Compressed, original dtype string)."""
     z = np.load(path)
     from repro.core.huffman.codebook import Codebook
     from repro.core.huffman.encode import EncodedStream
@@ -99,8 +100,26 @@ def _load_blob(path, method="gap"):
         else np.dtype(np.float32),
         eb=float(z["eb"]), radius=int(z["radius"]),
         rel_range=float(z["rel_range"]), max_abs=float(z["max_abs"]))
+    return c, str(z["orig_dtype"])
+
+
+def _load_blob(path, method="gap"):
+    c, orig_dtype = _read_blob(path)
     x = sz.decompress(c, method=method)
-    return jnp.asarray(x, jnp.dtype(str(z["orig_dtype"])))
+    return jnp.asarray(x, jnp.dtype(orig_dtype))
+
+
+def _load_blobs_batched(paths, method="gap"):
+    """Restore many compressed shards with class-batched decode.
+
+    All shards decode through ``sz.decompress_batch`` -- one Huffman
+    decode-write dispatch per CR class across the whole checkpoint instead
+    of one tuned decode per shard.
+    """
+    blobs = [_read_blob(p) for p in paths]
+    xs = sz.decompress_batch([c for c, _ in blobs], method=method)
+    return [jnp.asarray(x, jnp.dtype(dt))
+            for x, (_, dt) in zip(xs, blobs)]
 
 
 class CheckpointManager:
@@ -175,10 +194,15 @@ class CheckpointManager:
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         trees: dict = {"params": {}, "opt": {}}
+        sz_names = [fname for fname, meta in manifest["entries"].items()
+                    if meta["kind"] == "sz"]
+        sz_arrays = _load_blobs_batched(
+            [os.path.join(d, fname + ".szblob.npz") for fname in sz_names])
+        sz_restored = dict(zip(sz_names, sz_arrays))
         for fname, meta in manifest["entries"].items():
             tname, key = fname.split(".", 1)
             if meta["kind"] == "sz":
-                arr = _load_blob(os.path.join(d, fname + ".szblob.npz"))
+                arr = sz_restored[fname]
             else:
                 arr = jnp.asarray(
                     np.load(os.path.join(d, fname + ".npy")))

@@ -1,18 +1,34 @@
 """Public compression API used by the framework features.
 
-Three consumers (see DESIGN.md §2):
-  * checkpoint/manager.py  -- compressed checkpoint shards
-  * models/kvcache.py      -- compressed KV-cache blocks
-  * optim/grad_compress.py -- gradient compression (uses quantize only;
-                              entropy stage is storage-side)
+Two framework consumers ride on this module (see README.md for the
+architecture of the plan/execute decode stack):
+  * checkpoint/manager.py  -- compressed checkpoint shards; restore decodes
+                              all shards through ``decompress_batch``
+  * models/kvcache.py      -- compressed KV-cache blocks, also batch-decoded
+
+Decoding is served by ``repro.core.huffman.pipeline``: ``build_plan`` runs
+the sync/count/prefix-sum phases and CR classification, ``decode`` executes
+the plan on a registered backend ("ref" jnp or "pallas" kernels), and
+``decode_batch`` merges the per-CR-class decode dispatch across tensors.
 """
 
 from __future__ import annotations
 
+from repro.core.huffman.pipeline import (  # noqa: F401  (public re-exports)
+    DecodeBackend,
+    DecoderPlan,
+    available_backends,
+    build_plan,
+    decode,
+    decode_batch,
+    get_backend,
+    register_backend,
+)
 from repro.core.sz.compressor import (  # noqa: F401  (public re-exports)
     Compressed,
     compress,
     decompress,
+    decompress_batch,
 )
 from repro.core.sz import lorenzo  # noqa: F401
 

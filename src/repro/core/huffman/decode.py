@@ -61,7 +61,7 @@ def decode_sequential(units, dec_sym, dec_len, n_symbols: int, max_len: int):
 
 @partial(jax.jit, static_argnames=("max_len", "collect"))
 def subseq_scan(units, dec_sym, dec_len, start_bits, end_bits, total_bits,
-                max_len: int, collect: bool = False):
+                max_len: int, collect: bool = False, lut_base=None):
     """Decode each subsequence window [start_bits[i], end_bits[i]).
 
     All arrays are vectorized over subsequences.  Returns
@@ -69,6 +69,10 @@ def subseq_scan(units, dec_sym, dec_len, start_bits, end_bits, total_bits,
     bit position of the first codeword at-or-after ``end_bits`` (the sync
     point handed to the next subsequence) and ``counts`` is the number of
     codewords whose start lies inside the window (clipped at ``total_bits``).
+
+    ``lut_base`` (optional int32[n]) is a per-subsequence offset added to the
+    peeked LUT index -- the batched multi-tensor decoder concatenates the
+    decode tables of several codebooks and selects per lane.
 
     With ``collect=True`` also returns uint16[n, MAX_SYMS_PER_SUBSEQ] padded
     symbols.  The loop is a masked fixed-shape ``while_loop`` -- the TPU
@@ -90,6 +94,8 @@ def subseq_scan(units, dec_sym, dec_len, start_bits, end_bits, total_bits,
         pos, count, syms = state
         active = pos < end
         win = peek(units, pos, max_len)
+        if lut_base is not None:
+            win = win + lut_base
         sym = dec_sym[win]
         length = dec_len[win].astype(jnp.int32)
         if collect:
@@ -243,18 +249,20 @@ def decode_write(units, dec_sym, dec_len, start_bits, total_bits,
 @partial(jax.jit, static_argnames=("max_len", "n_out", "tile_syms", "ss_max"))
 def decode_write_tiles(units, dec_sym, dec_len, start_bits, end_bits, offsets,
                        total_bits, max_len: int, n_out: int, tile_syms: int,
-                       ss_max: int):
+                       ss_max: int, lut_base=None):
     """Phase 4 (optimized, paper Alg. 1 analogue): output-tile-centric decode.
 
     The output is cut into fixed tiles of ``tile_syms`` symbols (the "shared
     memory buffer" -- here a VMEM staging tile).  For each tile we decode the
     (statically bounded) range of subsequences overlapping it and scatter
     *locally* before emitting one dense aligned tile.  ``ss_max`` must be
-    >= ceil(tile_syms / min_starts_per_subseq) + 2.
+    >= ``pipeline.ss_max_for_tile(tile_syms, max_len)``.
 
     ``start_bits``/``end_bits`` are absolute bit windows per subsequence;
     passing them explicitly lets the tuner run this over *gathered* (sorted
-    by compression-ratio class) subsequence sets.
+    by compression-ratio class) subsequence sets.  ``lut_base`` (optional
+    int32[n_subseq]) selects a per-subsequence decode table inside a merged
+    LUT (the batched multi-tensor path).
 
     This jnp version is the oracle for ``repro.kernels.huffman_decode``.
     """
@@ -271,8 +279,10 @@ def decode_write_tiles(units, dec_sym, dec_len, start_bits, end_bits, offsets,
                         n_subseq - 1)
         starts = start_bits[subs]
         ends = end_bits[subs]
+        lb = None if lut_base is None else lut_base[subs]
         _, counts, padded = subseq_scan(units, dec_sym, dec_len, starts, ends,
-                                        total_bits, max_len, collect=True)
+                                        total_bits, max_len, collect=True,
+                                        lut_base=lb)
         base = tile_base[t]
         local = offsets[subs][:, None] + jnp.arange(MAX_SYMS_PER_SUBSEQ)[None, :] - base
         valid = (
@@ -313,11 +323,13 @@ def decode_gap_array(stream: EncodedStream, dec_sym, dec_len, max_len: int,
                             max_len)
     offsets = output_offsets(counts)
     if use_tiles:
-        ss_max = tile_syms // ((SUBSEQ_BITS - max_len) // max_len + 1) + 2
+        from repro.core.huffman.pipeline import ss_max_for_tile
+
         return decode_write_tiles(stream.units, dec_sym, dec_len, starts,
                                   boundaries + SUBSEQ_BITS, offsets,
                                   stream.total_bits, max_len, n_out,
-                                  tile_syms, ss_max)
+                                  tile_syms, ss_max_for_tile(tile_syms,
+                                                             max_len))
     out, _ = decode_write(stream.units, dec_sym, dec_len, starts,
                           stream.total_bits, max_len, n_out)
     return out
@@ -341,11 +353,13 @@ def decode_selfsync(stream: EncodedStream, dec_sym, dec_len, max_len: int,
                             max_len)
     offsets = output_offsets(counts)
     if use_tiles:
-        ss_max = tile_syms // ((SUBSEQ_BITS - max_len) // max_len + 1) + 2
+        from repro.core.huffman.pipeline import ss_max_for_tile
+
         return decode_write_tiles(units, dec_sym, dec_len, start,
                                   boundaries + SUBSEQ_BITS, offsets,
                                   stream.total_bits, max_len, n_out,
-                                  tile_syms, ss_max)
+                                  tile_syms, ss_max_for_tile(tile_syms,
+                                                             max_len))
     out, _ = decode_write(units, dec_sym, dec_len, start, stream.total_bits,
                           max_len, n_out)
     return out

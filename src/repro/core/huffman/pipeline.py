@@ -1,0 +1,666 @@
+"""Unified plan/execute decoder pipeline (single entry point for decoding).
+
+The paper's decode stack is a fixed phase sequence -- sync-point discovery
+(gap array or self-synchronization), per-subsequence count, output-offset
+prefix sum, then the tuned tile-staged decode-write.  This module factors
+that sequence into two layers so every consumer (``core/sz/compressor``,
+``checkpoint/manager``, ``models/kvcache``, the benchmarks) calls one API:
+
+    build_plan()    phases 1-3 + the online tuner's per-CR-class dispatch
+                    plan (paper Alg. 2): sync starts, counts, output
+                    offsets, CR classes, per-class tile sizes.
+    decode()        phase 4 through a named *backend*; strategies:
+                    "tuned"  per-CR-class tile decode (paper Alg. 1 + 2),
+                    "tile"   fixed-tile staged decode (paper Alg. 1),
+                    "padded" padded-layout baseline (the original decoders'
+                             uncoalesced-write cost structure).
+    decode_batch()  class-merged decode of MANY tensors: sequences of equal
+                    CR class from all tensors are gathered into one
+                    decode-write dispatch, so N checkpoint shards or
+                    KV-cache blocks cost one dispatch per class instead of
+                    N x classes (the cuSZ+-style batched dispatch).
+
+Backends live in a small registry: "ref" is the pure-jnp reference
+(``core.huffman.decode``), "pallas" the kernel path (``repro.kernels.ops``,
+imported lazily so core stays jnp-only until kernels are requested).  Every
+backend counts its decode-write dispatches in ``backend.stats`` -- tests
+assert the batched path issues at most one dispatch per CR class.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.huffman import decode as hd
+from repro.core.huffman.bits import SUBSEQ_BITS, UNIT_BITS
+from repro.core.huffman.encode import EncodedStream
+
+# Paper Alg. 2 constants: class c in {1..T_high} covers CR in (c-1, c];
+# class T_high+1 covers (T_high, 16].
+T_HIGH_DEFAULT = 8          # paper's V100 value; VMEM budget gives the same
+OVERFLOW_TILE = 3584        # paper: optimal buffer for CR > T_high on V100
+SYMBOL_BYTES = 2
+DEFAULT_TILE_SYMS = 4096
+
+
+def ss_max_for_tile(tile_syms: int, max_len: int) -> int:
+    """Static bound on subsequences overlapping one ``tile_syms`` output tile.
+
+    Every codeword is at most ``max_len`` bits, so a 128-bit subsequence
+    contains at least ``(SUBSEQ_BITS - max_len) // max_len + 1`` codeword
+    starts (``Codebook.min_starts_per_subseq``).  A tile therefore overlaps
+    at most ``tile_syms / min_starts`` whole subsequences, plus one partial
+    subsequence at each edge.  This is the single audited home of the
+    formula -- the decode-write kernels' lane provisioning and the VMEM
+    scratch sizing both key off it.
+    """
+    min_starts = (SUBSEQ_BITS - max_len) // max_len + 1
+    return tile_syms // min_starts + 2
+
+
+# ---------------------------------------------------------------------------
+# CR classification (paper Alg. 2: CLASSIFY / HISTOGRAM / SORT / plan)
+# ---------------------------------------------------------------------------
+
+
+def sequence_ratios(seq_counts: jnp.ndarray, subseqs_per_seq: int):
+    """Per-sequence compression ratio: decoded bytes / encoded bytes."""
+    enc_bytes = subseqs_per_seq * SUBSEQ_BITS // 8
+    return seq_counts.astype(jnp.float32) * SYMBOL_BYTES / enc_bytes
+
+
+def classify(ratios: jnp.ndarray, t_high: int = T_HIGH_DEFAULT):
+    """CLASSIFYCR: CR in (c-1, c] -> class c; CR > t_high -> t_high + 1."""
+    cls = jnp.ceil(ratios).astype(jnp.int32)
+    return jnp.clip(cls, 1, t_high + 1)
+
+
+def class_histogram(classes: jnp.ndarray, t_high: int = T_HIGH_DEFAULT):
+    """ParHISTOGRAM (jnp fallback; the Pallas kernel lives in repro.kernels)."""
+    return jnp.bincount(classes, length=t_high + 2)
+
+
+def sort_by_class(classes: jnp.ndarray):
+    """ParKeyValueSort: stable key-value sort of sequence ids by class."""
+    idx = jnp.arange(classes.shape[0], dtype=jnp.int32)
+    keys, vals = jax.lax.sort_key_val(classes, idx, is_stable=True)
+    return keys, vals
+
+
+def tile_for_class(c: int, t_high: int = T_HIGH_DEFAULT) -> int:
+    """Buffer (tile) size for a class: 1024 symbols per CR unit, as in the
+    paper ("sequences in the (3,4] group ... buffer of length 4096"), with
+    the overflow class pinned at OVERFLOW_TILE."""
+    if c > t_high:
+        return OVERFLOW_TILE
+    return 1024 * max(c, 1)
+
+
+@dataclasses.dataclass
+class ClassPlan:
+    """Host-side per-CR-class dispatch plan (per-class sequence id lists)."""
+
+    t_high: int
+    classes: np.ndarray          # int32[n_seq]
+    seq_order: np.ndarray        # int32[n_seq] sequence ids sorted by class
+    class_start: np.ndarray      # int32[t_high+3] prefix offsets into seq_order
+    tile_syms: dict              # class -> tile size
+
+    def class_seq_ids(self, c: int) -> np.ndarray:
+        lo, hi = int(self.class_start[c]), int(self.class_start[c + 1])
+        return self.seq_order[lo:hi]
+
+
+def make_plan(stream, seq_counts, subseqs_per_seq: int,
+              t_high: int = T_HIGH_DEFAULT) -> ClassPlan:
+    """Build the per-CR-class dispatch plan from per-sequence symbol counts.
+
+    ``stream`` is accepted (and ignored) for signature compatibility with
+    the pre-pipeline ``tuning.make_plan``.
+    """
+    del stream
+    ratios = sequence_ratios(jnp.asarray(seq_counts), subseqs_per_seq)
+    classes = classify(ratios, t_high)
+    hist = class_histogram(classes, t_high)
+    keys, order = sort_by_class(classes)
+    class_start = np.zeros(t_high + 3, np.int32)
+    class_start[1:] = np.cumsum(np.asarray(hist))
+    return ClassPlan(
+        t_high=t_high,
+        classes=np.asarray(classes),
+        seq_order=np.asarray(order),
+        class_start=class_start,
+        tile_syms={c: tile_for_class(c, t_high) for c in range(1, t_high + 2)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DecodeBackend:
+    """One implementation of the decode phases.
+
+    ``count_fn``  (units, ds, dl, start_abs, end_abs, total_bits, max_len)
+                  -> counts
+    ``sync_fn``   (units, ds, dl, total_bits, n_subseq, sps, max_len,
+                  early_exit) -> (start_abs, counts)
+    ``tiles_fn``  phase-4 tile decode; signature of
+                  ``decode.decode_write_tiles`` (+ optional ``lut_base``)
+    ``padded_fn`` phase-4 padded baseline: (units, ds, dl, start_abs,
+                  end_abs, total_bits, max_len, n_out) -> out
+    """
+
+    name: str
+    count_fn: Callable
+    sync_fn: Callable
+    tiles_fn: Callable
+    padded_fn: Callable
+    stats: dict = dataclasses.field(
+        default_factory=lambda: {"decode_write_dispatches": 0})
+
+    def reset_stats(self):
+        self.stats["decode_write_dispatches"] = 0
+
+    # Counted dispatch wrappers: every phase-4 launch goes through these.
+    def decode_tiles(self, *args, **kwargs):
+        self.stats["decode_write_dispatches"] += 1
+        return self.tiles_fn(*args, **kwargs)
+
+    def decode_padded(self, *args, **kwargs):
+        self.stats["decode_write_dispatches"] += 1
+        return self.padded_fn(*args, **kwargs)
+
+
+_BACKEND_FACTORIES: dict[str, Callable[[], DecodeBackend]] = {}
+_BACKENDS: dict[str, DecodeBackend] = {}
+
+
+def register_backend(name: str, factory: Callable[[], DecodeBackend]):
+    _BACKEND_FACTORIES[name] = factory
+    _BACKENDS.pop(name, None)
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKEND_FACTORIES)
+
+
+def get_backend(backend: "str | DecodeBackend") -> DecodeBackend:
+    if isinstance(backend, DecodeBackend):
+        return backend
+    if backend not in _BACKEND_FACTORIES:
+        raise ValueError(
+            f"unknown backend {backend!r}; available: {available_backends()}")
+    if backend not in _BACKENDS:
+        _BACKENDS[backend] = _BACKEND_FACTORIES[backend]()
+    return _BACKENDS[backend]
+
+
+def _make_ref_backend() -> DecodeBackend:
+    def count(units, ds, dl, start_abs, end_abs, total_bits, max_len):
+        _, counts = hd.subseq_scan(jnp.asarray(units), ds, dl, start_abs,
+                                   end_abs, total_bits, max_len)
+        return counts
+
+    def sync(units, ds, dl, total_bits, n_subseq, sps, max_len,
+             early_exit=True):
+        units = jnp.asarray(units)
+        start, _ = hd.selfsync_intra(units, ds, dl, total_bits, n_subseq,
+                                     max_len, sps, early_exit=early_exit)
+        start, _ = hd.selfsync_inter(units, ds, dl, start, total_bits,
+                                     max_len, sps)
+        ends = jnp.arange(n_subseq, dtype=jnp.int32) * SUBSEQ_BITS + SUBSEQ_BITS
+        _, counts = hd.subseq_scan(units, ds, dl, start, ends, total_bits,
+                                   max_len)
+        return start, counts
+
+    def padded(units, ds, dl, start_abs, end_abs, total_bits, max_len, n_out):
+        del end_abs  # the padded reference derives windows from boundaries
+        out, _ = hd.decode_write(jnp.asarray(units), ds, dl, start_abs,
+                                 total_bits, max_len, n_out)
+        return out
+
+    return DecodeBackend(name="ref", count_fn=count, sync_fn=sync,
+                         tiles_fn=hd.decode_write_tiles, padded_fn=padded)
+
+
+def _make_pallas_backend(interpret: bool = True) -> DecodeBackend:
+    """Kernel backend.  ``interpret=True`` runs the Pallas interpreter (the
+    CPU-safe default of this container); ``interpret=False`` compiles the
+    kernels for the accelerator (registered as "pallas-compiled")."""
+    import functools
+
+    from repro.kernels import ops  # lazy: keeps core jnp-only by default
+
+    def count(units, ds, dl, start_abs, end_abs, total_bits, max_len):
+        counts, _ = ops.subseq_counts(units, ds, dl, start_abs, end_abs,
+                                      total_bits, max_len,
+                                      interpret=interpret)
+        return counts
+
+    def sync(units, ds, dl, total_bits, n_subseq, sps, max_len,
+             early_exit=True):
+        start, counts, _ = ops.selfsync_sync(units, ds, dl, total_bits,
+                                             n_subseq, sps, max_len,
+                                             early_exit=early_exit,
+                                             interpret=interpret)
+        return start, counts
+
+    def padded(units, ds, dl, start_abs, end_abs, total_bits, max_len, n_out):
+        out, _ = ops.decode_padded_compact(units, ds, dl, start_abs, end_abs,
+                                           total_bits, max_len, n_out,
+                                           interpret=interpret)
+        return out
+
+    name = "pallas" if interpret else "pallas-compiled"
+    return DecodeBackend(name=name, count_fn=count, sync_fn=sync,
+                         tiles_fn=functools.partial(ops.decode_write_tiles,
+                                                    interpret=interpret),
+                         padded_fn=padded)
+
+
+register_backend("ref", _make_ref_backend)
+register_backend("pallas", _make_pallas_backend)
+register_backend("pallas-compiled",
+                 lambda: _make_pallas_backend(interpret=False))
+
+
+# ---------------------------------------------------------------------------
+# Plan construction (phases 1-3 + classification)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeLuts:
+    """Minimal decode-table view: what ``decode()`` needs of a Codebook."""
+
+    dec_sym: Any
+    dec_len: Any
+    max_len: int
+
+
+def _as_luts(codebook) -> DecodeLuts:
+    return DecodeLuts(dec_sym=jnp.asarray(codebook.dec_sym),
+                      dec_len=jnp.asarray(codebook.dec_len),
+                      max_len=int(codebook.max_len))
+
+
+@dataclasses.dataclass
+class DecoderPlan:
+    """Everything phase 4 needs: sync starts, counts, offsets, CR classes."""
+
+    method: str                 # "gap" | "selfsync"
+    start_bits: jnp.ndarray     # int32[n_subseq] absolute sync starts
+    end_bits: jnp.ndarray       # int32[n_subseq] absolute window ends
+    counts: jnp.ndarray         # int32[n_subseq] codeword starts per window
+    offsets: jnp.ndarray        # int32[n_subseq+1] exclusive prefix sum
+    seq_counts: np.ndarray      # int64[n_seq] symbols per sequence
+    classes: ClassPlan          # per-CR-class dispatch plan
+    subseqs_per_seq: int
+    t_high: int
+
+
+def build_plan(stream: EncodedStream, codebook, method: str = "gap",
+               backend: "str | DecodeBackend" = "ref",
+               t_high: int = T_HIGH_DEFAULT,
+               early_exit: bool = True) -> DecoderPlan:
+    """Run phases 1-3 on ``backend`` and classify sequences by CR."""
+    be = get_backend(backend)
+    luts = _as_luts(codebook)
+    units = jnp.asarray(stream.units)
+    n_subseq = stream.n_subseq
+    sps = stream.subseqs_per_seq
+    boundaries = jnp.arange(n_subseq, dtype=jnp.int32) * SUBSEQ_BITS
+    ends = boundaries + SUBSEQ_BITS
+
+    if method == "gap":
+        starts = boundaries + stream.gaps.astype(jnp.int32)
+        counts = be.count_fn(units, luts.dec_sym, luts.dec_len, starts, ends,
+                             stream.total_bits, luts.max_len)
+    elif method == "selfsync":
+        starts, counts = be.sync_fn(units, luts.dec_sym, luts.dec_len,
+                                    stream.total_bits, n_subseq, sps,
+                                    luts.max_len, early_exit=early_exit)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    counts = jnp.asarray(counts)
+    offsets = hd.output_offsets(counts)
+    seq_counts = np.asarray(counts).reshape(-1, sps).sum(
+        axis=1, dtype=np.int64)
+    classes = make_plan(None, seq_counts, sps, t_high)
+    return DecoderPlan(method=method, start_bits=jnp.asarray(starts),
+                       end_bits=ends, counts=counts, offsets=offsets,
+                       seq_counts=seq_counts, classes=classes,
+                       subseqs_per_seq=sps, t_high=t_high)
+
+
+# ---------------------------------------------------------------------------
+# Execution (phase 4)
+# ---------------------------------------------------------------------------
+
+
+def _pad_pow2(n: int, lo: int = 8) -> int:
+    p = lo
+    while p < n:
+        p *= 2
+    return p
+
+
+def _max_tile_span(offsets: np.ndarray, tile_syms: int, n_sym: int) -> int:
+    """Most subsequences any ``tile_syms``-symbol output tile overlaps.
+
+    ``offsets`` is the exclusive prefix sum over the gathered subsequences
+    (host int64).  Matches the ``searchsorted`` tile->subsequence mapping of
+    the decode-write kernels.
+    """
+    if n_sym <= 0 or offsets.shape[0] <= 1:
+        return 1
+    n_tiles = (n_sym + tile_syms - 1) // tile_syms
+    base = np.arange(n_tiles, dtype=np.int64) * tile_syms
+    s0 = np.searchsorted(offsets, base, side="right") - 1
+    last = np.minimum(base + tile_syms, n_sym) - 1
+    s1 = np.maximum(np.searchsorted(offsets, last, side="right") - 1, s0)
+    return int((s1 - s0 + 1).max())
+
+
+def _class_dispatch(tiles_fn, units, dec_sym, dec_len, max_len: int,
+                    total_bits, tensors: list, t_high: int) -> list:
+    """Per-CR-class decode-write over one or many tensors.
+
+    ``tensors`` holds one dict per decoded tensor:
+      starts / ends / counts : int32[n_seq * sps] (bit positions already
+                               shifted into the merged unit space)
+      sps                    : subsequences per sequence
+      seq_counts             : int64[n_seq] (host)
+      seq_out_start          : int64[n_seq+1] global output offsets (host)
+      classes                : ClassPlan
+      lut_base               : int or None -- offset into the merged LUT
+      n_out                  : output symbol count
+
+    For every class, the matching sequences of ALL tensors are gathered into
+    ONE ``tiles_fn`` dispatch (this is the batching the cuSZ+ line of work
+    gets from per-class kernel launches); class-local output is then
+    scattered back to each tensor's global positions.
+    """
+    outs = [jnp.zeros((m["n_out"],), jnp.uint16) for m in tensors]
+    use_lut_base = any(m["lut_base"] is not None for m in tensors)
+
+    for c in range(1, t_high + 2):
+        sel = []                     # (tensor index, seq ids of class c)
+        class_n = 0
+        for ti, m in enumerate(tensors):
+            ids = m["classes"].class_seq_ids(c)
+            if ids.size:
+                sel.append((ti, ids))
+                class_n += int(m["seq_counts"][ids].sum())
+        if not sel:
+            continue
+
+        tile = tile_for_class(c, t_high)
+        class_n_pad = _pad_pow2(max(class_n, 1))
+
+        # Gather the class's subsequences, DROPPING count-0 lanes (the
+        # zero-padded tail of each tensor's final sequence).  Dead lanes
+        # carry no symbols but would consume tile-decode lanes: a tile's
+        # symbol range could then span more subsequences than ``ss_max``
+        # provisions, silently dropping the symbols past the lane budget.
+        starts_p, ends_p, counts_p, lut_p = [], [], [], []
+        for ti, ids in sel:
+            m = tensors[ti]
+            sps = m["sps"]
+            cnt_rows = m["counts_np"].reshape(-1, sps)[ids].reshape(-1)
+            keep = jnp.asarray(np.nonzero(cnt_rows > 0)[0].astype(np.int32))
+            row = jnp.asarray(ids, jnp.int32)
+            starts_p.append(m["starts"].reshape(-1, sps)[row].reshape(-1)[keep])
+            ends_p.append(m["ends"].reshape(-1, sps)[row].reshape(-1)[keep])
+            counts_p.append(cnt_rows[cnt_rows > 0])
+            if use_lut_base:
+                lut_p.append(np.full(counts_p[-1].shape[0],
+                                     m["lut_base"] or 0, np.int32))
+        g_counts_np = np.concatenate(counts_p).astype(np.int64)
+        # Pad the gathered subsequence set and the class output to powers of
+        # two so the jit cache stays bounded across class populations.
+        n_ss = g_counts_np.shape[0]
+        n_ss_pad = _pad_pow2(n_ss)
+        pad = n_ss_pad - n_ss
+        if pad:
+            # Inactive pad lanes: start == end == 0 decodes nothing, zero
+            # counts keep the offsets flat past the real output.
+            z = jnp.zeros((pad,), jnp.int32)
+            starts_p.append(z)
+            ends_p.append(z)
+            if use_lut_base:
+                lut_p.append(np.zeros((pad,), np.int32))
+        g_starts = jnp.concatenate(starts_p)
+        g_ends = jnp.concatenate(ends_p)
+        offs_np = np.zeros(n_ss_pad + 1, np.int64)
+        offs_np[1:1 + n_ss] = np.cumsum(g_counts_np)
+        offs_np[1 + n_ss:] = offs_np[n_ss]
+        g_offsets = jnp.asarray(offs_np.astype(np.int32))
+
+        # Lane provisioning: the static bound assumes every subsequence in a
+        # tile's span carries >= min_starts codewords; the (at most one per
+        # tensor) partial subsequence at a stream tail can carry fewer, so
+        # also bound by the worst ACTUAL span any tile needs.
+        ss_max = max(ss_max_for_tile(tile, max_len),
+                     _max_tile_span(offs_np[:1 + n_ss], tile, class_n) + 2)
+        ss_max = -(-ss_max // 8) * 8   # round up: bounds jit-cache variants
+
+        kwargs = {}
+        if use_lut_base:
+            kwargs["lut_base"] = jnp.asarray(np.concatenate(lut_p))
+
+        class_out = tiles_fn(units, dec_sym, dec_len, g_starts, g_ends,
+                             g_offsets, total_bits, max_len, class_n_pad,
+                             tile, ss_max, **kwargs)
+
+        # Scatter class-local output back to each tensor's global positions.
+        base = 0
+        for ti, ids in sel:
+            m = tensors[ti]
+            cnt, sos = m["seq_counts"], m["seq_out_start"]
+            n_t = int(cnt[ids].sum())
+            if n_t:
+                pos = np.concatenate([
+                    np.arange(sos[s], sos[s] + cnt[s], dtype=np.int64)
+                    for s in ids])
+                outs[ti] = outs[ti].at[jnp.asarray(pos)].set(
+                    class_out[base:base + n_t])
+            base += n_t
+    return outs
+
+
+def _tensor_meta(plan: DecoderPlan, n_out: int, bit_offset: int = 0,
+                 lut_base: "int | None" = None, clamp_bits=None) -> dict:
+    """Phase-4 view of one tensor for ``_class_dispatch``."""
+    starts = plan.start_bits
+    ends = plan.end_bits
+    if clamp_bits is not None:
+        ends = jnp.minimum(ends, jnp.int32(clamp_bits))
+    if bit_offset:
+        starts = starts + jnp.int32(bit_offset)
+        ends = ends + jnp.int32(bit_offset)
+    seq_out_start = np.zeros(plan.seq_counts.shape[0] + 1, np.int64)
+    seq_out_start[1:] = np.cumsum(plan.seq_counts)
+    return {
+        "starts": starts, "ends": ends,
+        "counts_np": np.asarray(plan.counts),
+        "sps": plan.subseqs_per_seq, "seq_counts": plan.seq_counts,
+        "seq_out_start": seq_out_start, "classes": plan.classes,
+        "lut_base": lut_base, "n_out": n_out,
+    }
+
+
+def decode(stream: EncodedStream, codebook, n_out: int, *,
+           plan: "DecoderPlan | None" = None,
+           backend: "str | DecodeBackend" = "ref",
+           method: str = "gap", strategy: str = "tile",
+           tile_syms: int = DEFAULT_TILE_SYMS,
+           t_high: int = T_HIGH_DEFAULT,
+           early_exit: bool = True) -> jnp.ndarray:
+    """Decode one stream: the single entry point for every decoder variant.
+
+    ``strategy``: "tuned" (per-CR-class tiles), "tile" (fixed ``tile_syms``),
+    or "padded" (baseline layout).  ``plan`` may be prebuilt (and may come
+    from a different backend); otherwise it is built here with ``method``.
+    """
+    be = get_backend(backend)
+    luts = _as_luts(codebook)
+    if plan is None:
+        plan = build_plan(stream, codebook, method=method, backend=be,
+                          t_high=t_high, early_exit=early_exit)
+    units = jnp.asarray(stream.units)
+
+    if strategy == "padded":
+        return be.decode_padded(units, luts.dec_sym, luts.dec_len,
+                                plan.start_bits, plan.end_bits,
+                                stream.total_bits, luts.max_len, n_out)
+    if strategy == "tile":
+        ss_max = ss_max_for_tile(tile_syms, luts.max_len)
+        return be.decode_tiles(units, luts.dec_sym, luts.dec_len,
+                               plan.start_bits, plan.end_bits, plan.offsets,
+                               stream.total_bits, luts.max_len, n_out,
+                               tile_syms, ss_max)
+    if strategy == "tuned":
+        meta = _tensor_meta(plan, n_out)
+        return _class_dispatch(be.decode_tiles, units, luts.dec_sym,
+                               luts.dec_len, luts.max_len, stream.total_bits,
+                               [meta], plan.t_high)[0]
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def execute_tuned(stream: EncodedStream, dec_sym, dec_len, max_len: int,
+                  n_out: int, start_bits, counts,
+                  t_high: int = T_HIGH_DEFAULT, tiles_fn=None) -> jnp.ndarray:
+    """Tuned per-class decode from precomputed phase 1-3 outputs.
+
+    Compatibility surface for the pre-pipeline ``tuning.decode_tuned``:
+    ``tiles_fn`` defaults to the jnp reference tile decoder and may be any
+    ``decode_write_tiles``-shaped callable (e.g. the Pallas kernel wrapper).
+    """
+    if tiles_fn is None:
+        tiles_fn = hd.decode_write_tiles
+    counts = jnp.asarray(counts)
+    sps = stream.subseqs_per_seq
+    n_subseq = stream.n_subseq
+    seq_counts = np.asarray(counts).reshape(-1, sps).sum(axis=1,
+                                                         dtype=np.int64)
+    classes = make_plan(None, seq_counts, sps, t_high)
+    ends = jnp.arange(n_subseq, dtype=jnp.int32) * SUBSEQ_BITS + SUBSEQ_BITS
+    plan = DecoderPlan(method="gap", start_bits=jnp.asarray(start_bits),
+                       end_bits=ends, counts=counts,
+                       offsets=hd.output_offsets(counts),
+                       seq_counts=seq_counts, classes=classes,
+                       subseqs_per_seq=sps, t_high=t_high)
+    meta = _tensor_meta(plan, n_out)
+    return _class_dispatch(tiles_fn, jnp.asarray(stream.units), dec_sym,
+                           dec_len, max_len, stream.total_bits, [meta],
+                           t_high)[0]
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-tensor decode
+# ---------------------------------------------------------------------------
+
+
+def _merge_luts(codebooks) -> tuple:
+    """Stack per-tensor decode LUTs into one table at a common ``max_len``.
+
+    A tensor whose codebook peeks fewer bits than the global maximum gets
+    its LUT upsampled: window ``w`` at ``max_len_g`` bits resolves via the
+    top ``max_len_t`` bits, i.e. ``np.repeat`` by the width ratio.  Huffman
+    codes are prefix-free, so the extra peeked bits never change the decoded
+    (symbol, length) pair.
+    """
+    max_len_g = max(int(cb.max_len) for cb in codebooks)
+    syms, lens, bases = [], [], []
+    stride = 1 << max_len_g
+    for t, cb in enumerate(codebooks):
+        reps = 1 << (max_len_g - int(cb.max_len))
+        syms.append(np.repeat(np.asarray(cb.dec_sym), reps))
+        lens.append(np.repeat(np.asarray(cb.dec_len), reps))
+        bases.append(t * stride)
+    return (jnp.asarray(np.concatenate(syms)),
+            jnp.asarray(np.concatenate(lens)), max_len_g, bases)
+
+
+# Bit positions are int32 throughout the decode stack; keep every merged
+# stream comfortably inside that space (one chunk still decode-batches
+# hundreds of tensors -- 2^30 bits is 128 MiB of compressed payload).
+MAX_BATCH_BITS = 1 << 30
+
+
+def decode_batch(streams, codebooks, n_outs, *,
+                 plans=None, backend: "str | DecodeBackend" = "ref",
+                 method: str = "gap", t_high: int = T_HIGH_DEFAULT,
+                 early_exit: bool = True) -> list:
+    """Decode many tensors with one decode-write dispatch per CR class.
+
+    Streams are concatenated at subsequence granularity (every stream is
+    already padded to whole sequences), LUTs are merged at a common
+    ``max_len`` with a per-subsequence ``lut_base``, and phase 4 gathers
+    same-class sequences from ALL tensors into one tile-decode dispatch.
+    Phases 1-3 remain per-tensor (they are the cheap, bandwidth-bound
+    phases; the dispatch-bound phase is decode-write).
+
+    Batches whose merged bitstream would overflow the int32 bit-position
+    space are transparently split into sub-batches of at most
+    ``MAX_BATCH_BITS`` merged bits (dispatch count then scales with the
+    number of sub-batches, not with the tensor count).
+
+    Returns a list of uint16 symbol arrays, bit-exact with per-tensor
+    ``decode()``.
+    """
+    items = list(zip(streams, codebooks, n_outs))
+    if not items:
+        return []
+    be = get_backend(backend)
+    if plans is None:
+        plans = [build_plan(s, cb, method=method, backend=be, t_high=t_high,
+                            early_exit=early_exit)
+                 for s, cb, _ in items]
+
+    # Split oversized multi-tensor batches.  A SINGLE stream over the budget
+    # is never split (it is the base case): it decodes alone, subject to the
+    # same int32 bit-position ceiling as every per-tensor decode.
+    item_bits = [int(s.units.shape[0]) * UNIT_BITS for s in streams]
+    if len(items) > 1 and sum(item_bits) > MAX_BATCH_BITS:
+        outs, lo, acc = [], 0, 0
+        for i, b in enumerate(item_bits):
+            if acc and acc + b > MAX_BATCH_BITS:
+                outs += decode_batch(streams[lo:i], codebooks[lo:i],
+                                     n_outs[lo:i], plans=plans[lo:i],
+                                     backend=be, t_high=t_high)
+                lo, acc = i, 0
+            acc += b
+        outs += decode_batch(streams[lo:], codebooks[lo:], n_outs[lo:],
+                             plans=plans[lo:], backend=be, t_high=t_high)
+        return outs
+
+    dec_sym, dec_len, max_len_g, lut_bases = _merge_luts(codebooks)
+
+    unit_arrays = [jnp.asarray(s.units) for s in streams]
+    units = jnp.concatenate(unit_arrays)
+    bit_offsets = np.zeros(len(items), np.int64)
+    bit_offsets[1:] = np.cumsum(
+        [int(u.shape[0]) * UNIT_BITS for u in unit_arrays])[:-1]
+    merged_total_bits = jnp.int32(int(units.shape[0]) * UNIT_BITS)
+
+    metas = []
+    for t, ((stream, _cb, n_out), plan) in enumerate(zip(items, plans)):
+        # Windows must clamp at the *tensor's* payload end before shifting
+        # into the merged bit space (the merged total no longer clamps them).
+        metas.append(_tensor_meta(plan, n_out,
+                                  bit_offset=int(bit_offsets[t]),
+                                  lut_base=lut_bases[t],
+                                  clamp_bits=stream.total_bits))
+    return _class_dispatch(be.decode_tiles, units, dec_sym, dec_len,
+                           max_len_g, merged_total_bits, metas, t_high)

@@ -1,183 +1,41 @@
-"""Online buffer-size tuning (paper Alg. 2, adapted to VMEM tiles).
+"""DEPRECATED shim: online buffer-size tuning moved into the pipeline layer.
 
-The paper tunes the *shared-memory buffer size* of the decode-write kernel
-per compression-ratio class: sequences are CLASSIFY'd by their compression
-ratio, HISTOGRAM'd, key-value SORT'd, and each class is decoded by a kernel
-instance whose buffer is sized for that class.  Too small a buffer wastes
-parallelism; too large reduces occupancy (Fig. 3: up to 40% penalty).
-
-TPU adaptation (DESIGN.md §3): the tunable is the output-tile size
-``tile_syms`` of the tile-centric decode kernel.  The trade-off it controls:
-
-  * larger tiles  -> fewer tile-boundary subsequences decoded twice
-                     (redundant decode work ~ ss_max/tile ~ 1/9 + O(1/n)),
-                     but a larger VMEM staging buffer + larger (ss_max, 128)
-                     decode scratch -> less room for double buffering and,
-                     past the VMEM budget, compile failure (the hard analogue
-                     of an occupancy cliff);
-  * smaller tiles -> for *low*-CR sequences most of the statically provisioned
-                     ``ss_max`` lanes are idle (a tile covers many more
-                     subsequences than provisioned -- wait, fewer symbols per
-                     subsequence means MORE subsequences per tile), so ss_max
-                     must be provisioned for CR=min -> the per-class split
-                     lets high-CR classes run with small ss_max per tile.
-
-The per-class dispatch mirrors the paper exactly: class c in {1..T_high}
-covers CR in (c-1, c]; class T_high+1 covers (T_high, 16].
+The paper's Alg. 2 (CLASSIFY / HISTOGRAM / SORT / per-class decode dispatch)
+now lives in ``repro.core.huffman.pipeline``: plan construction in
+``build_plan`` / ``make_plan``, per-class execution in
+``decode(strategy="tuned")`` and the batched ``decode_batch``.  This module
+re-exports the classification primitives and keeps the pre-pipeline
+``decode_tuned`` entry point for existing callers (benchmarks, older
+notebooks).  New code should use ``pipeline.decode``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.huffman.bits import SUBSEQ_BITS
-from repro.core.huffman import decode as hd
-from repro.core.huffman.encode import EncodedStream
-
-T_HIGH_DEFAULT = 8          # paper's V100 value; VMEM budget gives the same
-OVERFLOW_TILE = 3584        # paper: optimal buffer for CR > T_high on V100
-SYMBOL_BYTES = 2
-
-
-def sequence_ratios(seq_counts: jnp.ndarray, subseqs_per_seq: int):
-    """Per-sequence compression ratio: decoded bytes / encoded bytes."""
-    enc_bytes = subseqs_per_seq * SUBSEQ_BITS // 8
-    return seq_counts.astype(jnp.float32) * SYMBOL_BYTES / enc_bytes
+from repro.core.huffman.pipeline import (  # noqa: F401  (public re-exports)
+    OVERFLOW_TILE,
+    SYMBOL_BYTES,
+    T_HIGH_DEFAULT,
+    ClassPlan as TuningPlan,
+    class_histogram,
+    classify,
+    execute_tuned,
+    make_plan,
+    sequence_ratios,
+    sort_by_class,
+    tile_for_class,
+)
 
 
-def classify(ratios: jnp.ndarray, t_high: int = T_HIGH_DEFAULT):
-    """CLASSIFYCR: CR in (c-1, c] -> class c; CR > t_high -> t_high + 1."""
-    cls = jnp.ceil(ratios).astype(jnp.int32)
-    return jnp.clip(cls, 1, t_high + 1)
-
-
-def class_histogram(classes: jnp.ndarray, t_high: int = T_HIGH_DEFAULT):
-    """ParHISTOGRAM (jnp fallback; the Pallas kernel lives in repro.kernels)."""
-    return jnp.bincount(classes, length=t_high + 2)
-
-
-def sort_by_class(classes: jnp.ndarray):
-    """ParKeyValueSort: stable key-value sort of sequence ids by class."""
-    idx = jnp.arange(classes.shape[0], dtype=jnp.int32)
-    keys, vals = jax.lax.sort_key_val(classes, idx, is_stable=True)
-    return keys, vals
-
-
-def tile_for_class(c: int, t_high: int = T_HIGH_DEFAULT) -> int:
-    """Buffer (tile) size for a class: 1024 symbols per CR unit, as in the
-    paper ("sequences in the (3,4] group ... buffer of length 4096"), with
-    the overflow class pinned at OVERFLOW_TILE."""
-    if c > t_high:
-        return OVERFLOW_TILE
-    return 1024 * max(c, 1)
-
-
-@dataclasses.dataclass
-class TuningPlan:
-    """Host-side dispatch plan (per-class sequence index lists)."""
-
-    t_high: int
-    classes: np.ndarray          # int32[n_seq]
-    seq_order: np.ndarray        # int32[n_seq] sequence ids sorted by class
-    class_start: np.ndarray      # int32[t_high+3] prefix offsets into seq_order
-    tile_syms: dict              # class -> tile size
-
-
-def make_plan(stream: EncodedStream, seq_counts, subseqs_per_seq: int,
-              t_high: int = T_HIGH_DEFAULT) -> TuningPlan:
-    ratios = sequence_ratios(jnp.asarray(seq_counts), subseqs_per_seq)
-    classes = classify(ratios, t_high)
-    hist = class_histogram(classes, t_high)
-    keys, order = sort_by_class(classes)
-    class_start = np.zeros(t_high + 3, np.int32)
-    class_start[1:] = np.cumsum(np.asarray(hist))
-    return TuningPlan(
-        t_high=t_high,
-        classes=np.asarray(classes),
-        seq_order=np.asarray(order),
-        class_start=class_start,
-        tile_syms={c: tile_for_class(c, t_high) for c in range(1, t_high + 2)},
-    )
-
-
-def _pad_pow2(n: int, lo: int = 8) -> int:
-    p = lo
-    while p < n:
-        p *= 2
-    return p
-
-
-def decode_tuned(stream: EncodedStream, dec_sym, dec_len, max_len: int,
-                 n_out: int, start_bits, counts,
-                 t_high: int = T_HIGH_DEFAULT,
+def decode_tuned(stream, dec_sym, dec_len, max_len: int, n_out: int,
+                 start_bits, counts, t_high: int = T_HIGH_DEFAULT,
                  decode_tiles_fn=None):
     """ShmemOptDecodeWrite: per-class tile decode with tuned buffer sizes.
 
-    ``start_bits``/``counts`` come from the preceding phase (sync discovery
-    or gap-based count decode).  ``decode_tiles_fn`` defaults to the jnp
-    reference ``decode_write_tiles``; the Pallas ops layer passes its kernel.
-    Returns the decoded symbols in original order.
+    DEPRECATED: thin wrapper over ``pipeline.execute_tuned`` (use
+    ``pipeline.decode(..., strategy="tuned")`` for full-pipeline decodes).
+    ``decode_tiles_fn`` defaults to the jnp reference ``decode_write_tiles``;
+    the Pallas ops layer passes its kernel.
     """
-    if decode_tiles_fn is None:
-        decode_tiles_fn = hd.decode_write_tiles
-
-    sps = stream.subseqs_per_seq
-    n_seq = stream.n_seq
-    counts = jnp.asarray(counts)
-    start_bits = jnp.asarray(start_bits)
-    seq_counts = counts.reshape(n_seq, sps).sum(axis=1, dtype=jnp.int32)
-    plan = make_plan(stream, seq_counts, sps, t_high)
-
-    # Global output offset of every sequence (original order).
-    seq_out_start = np.zeros(n_seq + 1, np.int64)
-    seq_out_start[1:] = np.cumsum(np.asarray(seq_counts))
-
-    out = jnp.zeros((n_out,), jnp.uint16)
-    seq_counts_np = np.asarray(seq_counts)
-    counts_2d = counts.reshape(n_seq, sps)
-    starts_2d = start_bits.reshape(n_seq, sps)
-    n_subseq = n_seq * sps
-    boundaries = (jnp.arange(n_subseq, dtype=jnp.int32) * SUBSEQ_BITS)
-    ends_2d = (boundaries + SUBSEQ_BITS).reshape(n_seq, sps)
-
-    for c in range(1, t_high + 2):
-        lo, hi = int(plan.class_start[c]), int(plan.class_start[c + 1])
-        if hi == lo:
-            continue
-        seq_ids = plan.seq_order[lo:hi]
-        tile = plan.tile_syms[c]
-        # Pad the class to a power-of-two sequence count (bounds jit cache).
-        n_pad = _pad_pow2(len(seq_ids))
-        ids_pad = np.zeros(n_pad, np.int32)
-        ids_pad[: len(seq_ids)] = seq_ids
-        valid = np.zeros(n_pad, bool)
-        valid[: len(seq_ids)] = True
-        ids_j = jnp.asarray(ids_pad)
-
-        g_starts = starts_2d[ids_j].reshape(-1)
-        g_ends = ends_2d[ids_j].reshape(-1)
-        g_counts = jnp.where(jnp.asarray(valid)[:, None],
-                             counts_2d[ids_j], 0).reshape(-1)
-        g_offsets = hd.output_offsets(g_counts)
-        class_n = int(np.sum(seq_counts_np[seq_ids]))
-        class_n_pad = _pad_pow2(max(class_n, 1))
-        ss_max = tile // ((SUBSEQ_BITS - max_len) // max_len + 1) + 2
-        class_out = decode_tiles_fn(
-            jnp.asarray(stream.units), dec_sym, dec_len, g_starts, g_ends,
-            g_offsets, stream.total_bits, max_len, class_n_pad, tile, ss_max)
-
-        # Scatter class-local output back to global positions.
-        local_seq_start = np.zeros(len(seq_ids) + 1, np.int64)
-        local_seq_start[1:] = np.cumsum(seq_counts_np[seq_ids])
-        pos_global = np.concatenate([
-            np.arange(seq_out_start[s], seq_out_start[s] + seq_counts_np[s],
-                      dtype=np.int64)
-            for s in seq_ids
-        ]) if class_n else np.zeros(0, np.int64)
-        out = out.at[jnp.asarray(pos_global)].set(class_out[:class_n])
-
-    return out
+    return execute_tuned(stream, dec_sym, dec_len, max_len, n_out,
+                         start_bits, counts, t_high=t_high,
+                         tiles_fn=decode_tiles_fn)

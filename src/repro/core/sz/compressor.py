@@ -9,6 +9,7 @@ or Pallas kernels.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -16,6 +17,7 @@ import numpy as np
 from repro.core.huffman import codebook as cb
 from repro.core.huffman import decode as hd
 from repro.core.huffman import encode as he
+from repro.core.huffman import pipeline as hp
 from repro.core.sz import lorenzo
 
 DEFAULT_EB = 1e-3
@@ -131,40 +133,85 @@ def compress(
     )
 
 
-def decompress(
-    c: Compressed,
-    method: str = "gap",
-    tile_syms: int = 4096,
-    use_tiles: bool = True,
-    use_kernels: bool = False,
-) -> jnp.ndarray:
-    """Decompress; ``method`` in {"gap", "selfsync", "naive_ref"}.
-
-    ``use_kernels=True`` routes decode phases through the Pallas kernels
-    (interpret mode on CPU); otherwise the jit'd jnp reference path is used.
-    """
-    book = c.codebook
-    dec_sym = jnp.asarray(book.dec_sym)
-    dec_len = jnp.asarray(book.dec_len)
-    n = c.n_symbols
-
-    if use_kernels:
-        from repro.kernels import ops as kops  # local import: keeps core pure-jnp
-        codes = kops.decode_pipeline(c.stream, dec_sym, dec_len, book.max_len,
-                                     n, method=method, tile_syms=tile_syms)
-    elif method == "gap":
-        codes = hd.decode_gap_array(c.stream, dec_sym, dec_len, book.max_len,
-                                    n, tile_syms=tile_syms, use_tiles=use_tiles)
-    elif method == "selfsync":
-        codes = hd.decode_selfsync(c.stream, dec_sym, dec_len, book.max_len,
-                                   n, tile_syms=tile_syms, use_tiles=use_tiles)
-    elif method == "naive_ref":
-        codes = hd.decode_sequential(jnp.asarray(c.stream.units), dec_sym,
-                                     dec_len, n_symbols=n,
-                                     max_len=book.max_len)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-
+def _dequantize(c: Compressed, codes: jnp.ndarray) -> jnp.ndarray:
     return lorenzo.dequantize(
         codes.reshape(c.shape), c.outlier_pos, c.outlier_val, c.eb, c.shape,
         radius=c.radius, dtype=jnp.dtype(str(c.dtype)))
+
+
+def _resolve_decode_args(use_tiles, use_kernels, backend, strategy, tuned):
+    """Map the deprecated flag triple onto (backend, strategy)."""
+    if use_kernels is not None:
+        warnings.warn("decompress(use_kernels=...) is deprecated; pass "
+                      "backend='pallas' or backend='ref'",
+                      DeprecationWarning, stacklevel=3)
+        backend = backend or ("pallas" if use_kernels else "ref")
+    if use_tiles is not None:
+        warnings.warn("decompress(use_tiles=...) is deprecated; pass "
+                      "strategy='tile' or strategy='padded'",
+                      DeprecationWarning, stacklevel=3)
+        strategy = strategy or ("tile" if use_tiles else "padded")
+    if tuned:
+        strategy = strategy or "tuned"
+    return backend or "ref", strategy or "tile"
+
+
+def decompress(
+    c: Compressed,
+    method: str = "gap",
+    tile_syms: int = hp.DEFAULT_TILE_SYMS,
+    use_tiles: "bool | None" = None,
+    use_kernels: "bool | None" = None,
+    *,
+    backend: "str | None" = None,
+    strategy: "str | None" = None,
+    tuned: bool = False,
+    plan=None,
+) -> jnp.ndarray:
+    """Decompress; ``method`` in {"gap", "selfsync", "naive_ref"}.
+
+    Decoding goes through the unified ``core.huffman.pipeline.decode`` entry
+    point: ``backend`` in {"ref", "pallas"} selects the jnp reference or the
+    Pallas kernels (interpret mode on CPU), ``strategy`` in {"tuned", "tile",
+    "padded"} selects the decode-write variant (``tuned=True`` is shorthand
+    for ``strategy="tuned"``), and ``plan`` may carry a prebuilt
+    ``DecoderPlan``.  ``use_tiles`` / ``use_kernels`` are deprecated aliases.
+    """
+    backend, strategy = _resolve_decode_args(use_tiles, use_kernels, backend,
+                                             strategy, tuned)
+    book = c.codebook
+    n = c.n_symbols
+
+    if method == "naive_ref":
+        codes = hd.decode_sequential(jnp.asarray(c.stream.units),
+                                     jnp.asarray(book.dec_sym),
+                                     jnp.asarray(book.dec_len), n_symbols=n,
+                                     max_len=book.max_len)
+    else:
+        codes = hp.decode(c.stream, book, n, plan=plan, method=method,
+                          backend=backend, strategy=strategy,
+                          tile_syms=tile_syms)
+    return _dequantize(c, codes)
+
+
+def decompress_batch(
+    cs: "list[Compressed]",
+    method: str = "gap",
+    *,
+    backend: str = "ref",
+    t_high: int = hp.T_HIGH_DEFAULT,
+) -> list:
+    """Decompress many tensors with class-batched decode dispatch.
+
+    Huffman decode-write runs once per CR class across ALL tensors
+    (``pipeline.decode_batch``) instead of once per class per tensor --
+    the dispatch structure that makes restoring N checkpoint shards or
+    KV-cache blocks scale with class count, not tensor count.  Output is
+    bit-exact with per-tensor ``decompress``.
+    """
+    if not cs:
+        return []
+    codes = hp.decode_batch([c.stream for c in cs], [c.codebook for c in cs],
+                            [c.n_symbols for c in cs], method=method,
+                            backend=backend, t_high=t_high)
+    return [_dequantize(c, q) for c, q in zip(cs, codes)]

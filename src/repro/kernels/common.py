@@ -40,8 +40,11 @@ def peek_rows(rows: jnp.ndarray, pos: jnp.ndarray, max_len: int) -> jnp.ndarray:
 
 
 def decode_window(rows, start, end, dec_sym, dec_len, max_len: int,
-                  collect: bool):
+                  collect: bool, lut_base=None):
     """Masked decode of per-lane windows [start, end) (local bit coords).
+
+    ``lut_base`` (optional int32[L]) offsets each lane's LUT index into a
+    merged multi-codebook decode table (the batched multi-tensor path).
 
     The loop is a ``while_loop`` whose predicate is "any lane still active"
     -- the TPU analogue of the paper's `__all_sync` early exit.  Returns
@@ -60,6 +63,8 @@ def decode_window(rows, start, end, dec_sym, dec_len, max_len: int,
         pos, count, syms = state
         active = pos < end
         win = peek_rows(rows, pos, max_len)
+        if lut_base is not None:
+            win = win + lut_base
         sym = dec_sym[win]
         length = dec_len[win].astype(jnp.int32)
         if collect:

@@ -11,7 +11,9 @@ Two kernels:
     set of subsequences overlapping its tile into a VMEM staging buffer and
     emits one dense, aligned tile -- the TPU analogue of the shared-memory
     staged coalesced write.  ``tile_syms`` is the tunable the online tuner
-    (core/huffman/tuning.py) selects per compression-ratio class.
+    (core/huffman/pipeline.py) selects per compression-ratio class; the
+    per-lane ``lut_base`` input selects a codebook inside a merged decode
+    LUT for the batched multi-tensor path.
 
 TPU notes: the in-kernel gather (LUT lookup, per-lane unit fetch) lowers to
 Mosaic dynamic-gather over VMEM; the local scatter into the staging tile is
@@ -83,17 +85,20 @@ def count_subseq(rows, start_local, end_local, dec_sym, dec_len,
     return counts, landing
 
 
-def decode_tiles_kernel_body(rows_ref, start_ref, end_ref, off_ref, sym_ref,
-                             len_ref, out_ref, *, max_len, tile_syms):
+def decode_tiles_kernel_body(rows_ref, start_ref, end_ref, off_ref, lut_ref,
+                             sym_ref, len_ref, out_ref, *, max_len,
+                             tile_syms):
     rows = rows_ref[0]            # (ss_max, ROW_UNITS)
     start = start_ref[0]          # (ss_max,) row-local start bits
     end = end_ref[0]              # (ss_max,)
     off = off_ref[0]              # (ss_max,) tile-local output offsets
+    lut_base = lut_ref[0]         # (ss_max,) per-lane LUT base offsets
     dec_sym = sym_ref[...]
     dec_len = len_ref[...]
 
     _, counts, padded = C.decode_window(rows, start, end, dec_sym, dec_len,
-                                        max_len, collect=True)
+                                        max_len, collect=True,
+                                        lut_base=lut_base)
     # VMEM staging: scatter each lane's symbols to its tile-local positions.
     k = jnp.arange(C.MAX_SYMS, dtype=jnp.int32)[None, :]
     local = off[:, None] + k
@@ -107,15 +112,17 @@ def decode_tiles_kernel_body(rows_ref, start_ref, end_ref, off_ref, sym_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("max_len", "tile_syms", "ss_max", "n_out", "interpret"))
-def decode_tiles(rows, start_local, end_local, off_local, dec_sym, dec_len,
-                 max_len: int, tile_syms: int, ss_max: int, n_out: int,
-                 interpret: bool = True):
+def decode_tiles(rows, start_local, end_local, off_local, lut_base, dec_sym,
+                 dec_len, max_len: int, tile_syms: int, ss_max: int,
+                 n_out: int, interpret: bool = True):
     """Tile-centric decode+write.
 
     rows:        uint32[n_tiles, ss_max, ROW_UNITS]
     start/end:   int32[n_tiles, ss_max]   (row-local windows)
     off_local:   int32[n_tiles, ss_max]   (output offset - tile base;
                  invalid lanes carry ``tile_syms``)
+    lut_base:    int32[n_tiles, ss_max]   (per-lane offset into a merged
+                 decode LUT; all-zero for single-codebook decodes)
     Returns uint16[n_out].
     """
     n_tiles = rows.shape[0]
@@ -130,13 +137,14 @@ def decode_tiles(rows, start_local, end_local, off_local, dec_sym, dec_len,
             pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
             pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
             pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
             pl.BlockSpec((lut,), lambda t: (0,)),
             pl.BlockSpec((lut,), lambda t: (0,)),
         ],
         out_specs=pl.BlockSpec((1, tile_syms), lambda t: (t, 0)),
         out_shape=jax.ShapeDtypeStruct((n_tiles, tile_syms), jnp.uint16),
         interpret=interpret,
-    )(rows, start_local, end_local, off_local, dec_sym, dec_len)
+    )(rows, start_local, end_local, off_local, lut_base, dec_sym, dec_len)
     return tiles.reshape(-1)[:n_out]
 
 

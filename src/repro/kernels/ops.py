@@ -58,9 +58,12 @@ def subseq_counts(units, dec_sym, dec_len, start_abs, end_abs, total_bits,
 
 def decode_write_tiles(units, dec_sym, dec_len, start_bits, end_bits, offsets,
                        total_bits, max_len: int, n_out: int, tile_syms: int,
-                       ss_max: int, interpret: bool = True):
+                       ss_max: int, lut_base=None, interpret: bool = True):
     """Kernel-backed phase 4; signature-compatible with the jnp reference
     ``core.huffman.decode.decode_write_tiles`` (so the tuner can inject it).
+
+    ``lut_base`` (optional int32[n_subseq]) selects a per-subsequence decode
+    table inside a merged LUT (the batched multi-tensor path).
     """
     units = jnp.asarray(units)
     n_subseq = start_bits.shape[0]
@@ -81,11 +84,15 @@ def decode_write_tiles(units, dec_sym, dec_len, start_bits, end_bits, offsets,
     end_local = jnp.where(valid, end_local, 0)
     off_local = jnp.where(valid, offsets[subs] - tile_base[:, None],
                           tile_syms)
+    if lut_base is None:
+        lut_tile = jnp.zeros(subs.shape, jnp.int32)
+    else:
+        lut_tile = jnp.where(valid, lut_base[subs], 0).astype(jnp.int32)
 
     rows = C.gather_subseq_rows(units, ids)
     return _dec.decode_tiles(rows, start_local, end_local,
-                             off_local.astype(jnp.int32), dec_sym, dec_len,
-                             max_len, tile_syms, ss_max, n_out,
+                             off_local.astype(jnp.int32), lut_tile, dec_sym,
+                             dec_len, max_len, tile_syms, ss_max, n_out,
                              interpret=interpret)
 
 
@@ -169,43 +176,21 @@ def decode_pipeline(stream: EncodedStream, dec_sym, dec_len, max_len: int,
                     n_out: int, method: str = "gap", tile_syms: int = 4096,
                     interpret: bool = True, tuned: bool = False,
                     early_exit: bool = True):
-    """Full kernel-path decoder (used by ``core.sz.compressor.decompress``).
+    """DEPRECATED full kernel-path decoder.
 
-    method="gap":       count kernel from gap starts -> prefix sum -> tiles
-    method="selfsync":  sync kernel (+inter chaining) -> prefix sum -> tiles
-    tuned=True routes the decode-write through the per-CR-class tuner with
-    the Pallas tile kernel injected.
+    Thin shim over ``core.huffman.pipeline.decode(backend="pallas")``, kept
+    for callers that hold raw LUTs instead of a ``Codebook``.  New code
+    should call the pipeline API directly.
     """
-    units = jnp.asarray(stream.units)
-    n_subseq = stream.gaps.shape[0]
-    boundaries = jnp.arange(n_subseq, dtype=jnp.int32) * SUBSEQ_BITS
-    ends_abs = boundaries + SUBSEQ_BITS
+    from repro.core.huffman import pipeline as pp
 
-    if method == "gap":
-        start_abs = boundaries + stream.gaps.astype(jnp.int32)
-        counts, _ = subseq_counts(units, dec_sym, dec_len, start_abs,
-                                  ends_abs, stream.total_bits, max_len,
-                                  interpret=interpret)
-    elif method == "selfsync":
-        start_abs, counts, _ = selfsync_sync(
-            units, dec_sym, dec_len, stream.total_bits, n_subseq,
-            stream.subseqs_per_seq, max_len, early_exit=early_exit,
-            interpret=interpret)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-
-    if tuned:
-        from repro.core.huffman import tuning
-
-        return tuning.decode_tuned(
-            stream, dec_sym, dec_len, max_len, n_out, start_abs, counts,
-            decode_tiles_fn=partial(decode_write_tiles, interpret=interpret))
-
-    offsets = hd.output_offsets(counts)
-    ss_max = tile_syms // ((SUBSEQ_BITS - max_len) // max_len + 1) + 2
-    return decode_write_tiles(units, dec_sym, dec_len, start_abs, ends_abs,
-                              offsets, stream.total_bits, max_len, n_out,
-                              tile_syms, ss_max, interpret=interpret)
+    luts = pp.DecodeLuts(dec_sym=jnp.asarray(dec_sym),
+                         dec_len=jnp.asarray(dec_len), max_len=max_len)
+    return pp.decode(stream, luts, n_out, method=method,
+                     strategy="tuned" if tuned else "tile",
+                     tile_syms=tile_syms,
+                     backend="pallas" if interpret else "pallas-compiled",
+                     early_exit=early_exit)
 
 
 # ---------------------------------------------------------------------------

@@ -14,21 +14,31 @@ from __future__ import annotations
 import jax
 
 
+def _auto_axis_kwargs(n_axes: int) -> dict:
+    """``axis_types`` kwarg for ``jax.make_mesh`` where supported.
+
+    ``jax.sharding.AxisType`` (and the ``axis_types=`` parameter) only exist
+    in newer jax; older versions behave as if every axis were ``Auto``, so
+    omitting the kwarg there is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_auto_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(data: int | None = None, model: int = 1):
     """Small mesh over whatever devices exist (tests / local runs)."""
     n = len(jax.devices())
     data = data or (n // model)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         **_auto_axis_kwargs(2))
 
 
 def batch_axes(mesh) -> tuple:

@@ -59,9 +59,15 @@ def compress_cache(cache: dict, eb: float = 1e-3,
     return CompressedCache(blobs, dts, shapes)
 
 
-def decompress_cache(cc: CompressedCache, method: str = "gap") -> dict:
-    out = {}
-    for name, blob in cc.blobs.items():
-        x = sz.decompress(blob, method=method)
-        out[name] = jnp.asarray(np.asarray(x), jnp.dtype(cc.orig_dtypes[name]))
-    return out
+def decompress_cache(cc: CompressedCache, method: str = "gap",
+                     backend: str = "ref") -> dict:
+    """Restore every cache tensor via the class-batched decoder.
+
+    All blocks decode in one ``decompress_batch`` call -- one decode-write
+    dispatch per CR class across the whole cache, not per tensor.
+    """
+    names = list(cc.blobs)
+    xs = sz.decompress_batch([cc.blobs[n] for n in names], method=method,
+                             backend=backend)
+    return {n: jnp.asarray(np.asarray(x), jnp.dtype(cc.orig_dtypes[n]))
+            for n, x in zip(names, xs)}

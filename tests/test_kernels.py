@@ -3,9 +3,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.huffman import decode as hd
+from repro.core.huffman.pipeline import ss_max_for_tile
 from repro.kernels import ops, ref
 
 from conftest import make_book_and_stream
@@ -16,7 +18,8 @@ def _luts(book):
 
 
 class TestCountKernel:
-    @pytest.mark.parametrize("n", [500, 4096, 9001])
+    @pytest.mark.parametrize(
+        "n", [500, 4096, pytest.param(9001, marks=pytest.mark.slow)])
     @pytest.mark.parametrize("zipf", [1.2, 2.0])
     def test_matches_ref(self, rng, n, zipf):
         book, syms, stream = make_book_and_stream(rng, n_syms=n, zipf=zipf)
@@ -32,6 +35,7 @@ class TestCountKernel:
         assert int(np.asarray(ck).sum()) == n
 
 
+@pytest.mark.slow
 class TestDecodeTilesKernel:
     @pytest.mark.parametrize("tile", [1024, 3584, 4096])
     def test_matches_ref(self, rng, tile):
@@ -44,7 +48,7 @@ class TestDecodeTilesKernel:
                                    bnds + 128, stream.total_bits,
                                    book.max_len)
         offsets = hd.output_offsets(counts)
-        ss_max = tile // ((128 - book.max_len) // book.max_len + 1) + 2
+        ss_max = ss_max_for_tile(tile, book.max_len)
         k = ops.decode_write_tiles(stream.units, ds, dl, starts, bnds + 128,
                                    offsets, stream.total_bits, book.max_len,
                                    7000, tile, ss_max)
@@ -71,6 +75,7 @@ class TestDecodeTilesKernel:
         assert np.array_equal(np.asarray(out_k), syms)
 
 
+@pytest.mark.slow
 class TestSelfsyncKernel:
     @pytest.mark.parametrize("early_exit", [True, False])
     def test_matches_ref(self, rng, early_exit):

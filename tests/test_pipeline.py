@@ -1,0 +1,214 @@
+"""Plan/execute pipeline: backend parity matrix + batched multi-tensor decode.
+
+The matrix asserts the single ``pipeline.decode`` entry point is bit-exact
+against the sequential oracle for every {method} x {backend} x {strategy}
+cell; the batch tests assert ``decode_batch`` is byte-identical to
+per-tensor decoding while issuing at most one decode-write dispatch per CR
+class across ALL tensors.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.huffman import decode as hd
+from repro.core.huffman import pipeline as pp
+
+from conftest import make_book_and_stream
+
+
+def _oracle(book, stream, n):
+    return np.asarray(hd.decode_sequential(
+        jnp.asarray(stream.units), jnp.asarray(book.dec_sym),
+        jnp.asarray(book.dec_len), n_symbols=n, max_len=book.max_len))
+
+
+class TestDecodeParityMatrix:
+    @pytest.mark.parametrize("method", ["gap", "selfsync"])
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    @pytest.mark.parametrize("strategy,tile_syms",
+                             [("tuned", None), ("tile", 1024), ("tile", 4096)])
+    def test_matches_sequential(self, rng, method, backend, strategy,
+                                tile_syms):
+        book, syms, stream = make_book_and_stream(rng, n_syms=4500)
+        kwargs = {} if tile_syms is None else {"tile_syms": tile_syms}
+        out = pp.decode(stream, book, len(syms), method=method,
+                        backend=backend, strategy=strategy, **kwargs)
+        assert np.array_equal(np.asarray(out), syms)
+        assert np.array_equal(_oracle(book, stream, len(syms)), syms)
+
+    def test_padded_baseline(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=3000)
+        for backend in ("ref", "pallas"):
+            out = pp.decode(stream, book, len(syms), method="gap",
+                            backend=backend, strategy="padded")
+            assert np.array_equal(np.asarray(out), syms), backend
+
+    def test_plan_is_backend_portable(self, rng):
+        """A plan built on one backend executes exactly on the other."""
+        book, syms, stream = make_book_and_stream(rng, n_syms=3000)
+        plan = pp.build_plan(stream, book, method="gap", backend="ref")
+        out = pp.decode(stream, book, len(syms), plan=plan, backend="pallas",
+                        strategy="tuned")
+        assert np.array_equal(np.asarray(out), syms)
+
+    def test_unknown_backend_and_strategy(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=500)
+        with pytest.raises(ValueError):
+            pp.decode(stream, book, len(syms), backend="no_such_backend")
+        with pytest.raises(ValueError):
+            pp.decode(stream, book, len(syms), strategy="no_such_strategy")
+
+
+class TestPlan:
+    def test_plan_offsets_partition_output(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=6000)
+        for method in ("gap", "selfsync"):
+            plan = pp.build_plan(stream, book, method=method)
+            assert int(plan.offsets[-1]) == len(syms)
+            assert int(plan.seq_counts.sum()) == len(syms)
+            n_seq = stream.n_seq
+            assert sorted(plan.classes.seq_order.tolist()) == list(range(n_seq))
+
+    def test_ss_max_single_source(self):
+        """The audited helper matches the codebook's min-starts bound."""
+        from repro.core.huffman.codebook import Codebook
+        from repro.core.huffman.bits import SUBSEQ_BITS
+
+        for max_len in (8, 10, 12):
+            for tile in (1024, 3584, 4096, 8192):
+                book = Codebook(n_symbols=2, max_len=max_len,
+                                enc_code=np.zeros(2, np.uint32),
+                                enc_len=np.full(2, max_len, np.uint8),
+                                dec_sym=np.zeros(1 << max_len, np.uint16),
+                                dec_len=np.full(1 << max_len, max_len,
+                                                np.uint8))
+                expect = tile // book.min_starts_per_subseq(SUBSEQ_BITS) + 2
+                assert pp.ss_max_for_tile(tile, max_len) == expect
+
+
+class TestDecodeBatch:
+    def _make_items(self, rng, specs):
+        items = []
+        for n, max_len, zipf in specs:
+            book, syms, stream = make_book_and_stream(
+                rng, n_syms=n, max_len=max_len, zipf=zipf)
+            items.append((stream, book, syms))
+        return items
+
+    @pytest.mark.parametrize(
+        "backend",
+        ["ref", pytest.param("pallas", marks=pytest.mark.slow)])
+    def test_byte_identical_to_per_tensor(self, rng, backend):
+        # >= 4 tensors, heterogeneous sizes AND codebook widths (max_len).
+        items = self._make_items(rng, [(5000, 12, 1.4), (2000, 10, 1.2),
+                                       (6001, 12, 2.0), (900, 11, 1.6),
+                                       (260, 12, 1.3)])
+        streams = [s for s, _, _ in items]
+        books = [b for _, b, _ in items]
+        n_outs = [len(y) for _, _, y in items]
+        outs = pp.decode_batch(streams, books, n_outs, backend=backend)
+        for (stream, book, syms), out in zip(items, outs):
+            per_tensor = pp.decode(stream, book, len(syms), backend=backend,
+                                   strategy="tuned")
+            assert np.asarray(out).tobytes() == np.asarray(
+                per_tensor).tobytes()
+            assert np.array_equal(np.asarray(out), syms)
+
+    def test_one_dispatch_per_class(self, rng):
+        """The registry counter proves class-merged dispatch: N tensors cost
+        at most one decode-write launch per CR class, not N x classes."""
+        items = self._make_items(rng, [(4000, 12, 1.4)] * 4)
+        streams = [s for s, _, _ in items]
+        books = [b for _, b, _ in items]
+        n_outs = [len(y) for _, _, y in items]
+        plans = [pp.build_plan(s, b) for s, b, _ in items]
+        classes_present = set()
+        for plan in plans:
+            classes_present |= {int(c) for c in plan.classes.classes}
+
+        be = pp.get_backend("ref")
+        be.reset_stats()
+        outs = pp.decode_batch(streams, books, n_outs, plans=plans)
+        batched = be.stats["decode_write_dispatches"]
+        assert batched <= len(classes_present)
+        assert batched <= plans[0].t_high + 1
+
+        be.reset_stats()
+        for (s, b, y), plan in zip(items, plans):
+            pp.decode(s, b, len(y), plan=plan, strategy="tuned")
+        per_tensor = be.stats["decode_write_dispatches"]
+        assert batched < per_tensor  # the whole point of the batch path
+        for (_, _, syms), out in zip(items, outs):
+            assert np.array_equal(np.asarray(out), syms)
+
+    def test_tail_padding_sequences(self, rng):
+        """Regression: tensors whose final sequence is mostly zero padding.
+
+        Each such sequence lands in a low-CR class with many count-0
+        subsequences; gathered across tensors, a single output tile used to
+        span more subsequences than ``ss_max`` provisioned, silently
+        zeroing the symbols past the lane budget (caught restoring a real
+        checkpoint whose optimizer-moment shard decoded corrupt)."""
+        items = []
+        k = 0
+        while len(items) < 6 and k < 64:
+            book, syms, stream = make_book_and_stream(
+                rng, n_syms=17000 + 9 * k, zipf=1.15)
+            k += 1
+            plan = pp.build_plan(stream, book)
+            if plan.classes.classes[-1] <= 2 and plan.seq_counts[-1] < 200:
+                items.append((stream, book, syms))
+        assert len(items) >= 4, "could not construct tail-padded streams"
+        outs = pp.decode_batch([s for s, _, _ in items],
+                               [b for _, b, _ in items],
+                               [len(y) for _, _, y in items])
+        for (_, _, syms), out in zip(items, outs):
+            assert np.array_equal(np.asarray(out), syms)
+
+    def test_oversized_batch_chunks(self, rng):
+        """Batches past the int32 bit budget split transparently."""
+        items = self._make_items(rng, [(2000, 12, 1.4)] * 4)
+        streams = [s for s, _, _ in items]
+        bits0 = int(streams[0].units.shape[0]) * 32
+        old = pp.MAX_BATCH_BITS
+        pp.MAX_BATCH_BITS = bits0 + 1   # at most one stream per sub-batch
+        try:
+            outs = pp.decode_batch(streams, [b for _, b, _ in items],
+                                   [len(y) for _, _, y in items])
+            # A single stream over the budget is the base case, not an
+            # infinite split (regression: RecursionError).
+            pp.MAX_BATCH_BITS = bits0 // 2
+            solo = pp.decode_batch(streams[:1], [items[0][1]],
+                                   [len(items[0][2])])
+        finally:
+            pp.MAX_BATCH_BITS = old
+        for (_, _, syms), out in zip(items, outs):
+            assert np.array_equal(np.asarray(out), syms)
+        assert np.array_equal(np.asarray(solo[0]), items[0][2])
+
+    def test_selfsync_batch(self, rng):
+        items = self._make_items(rng, [(3000, 12, 1.4), (1200, 12, 1.8),
+                                       (2500, 11, 1.3), (800, 12, 1.5)])
+        outs = pp.decode_batch([s for s, _, _ in items],
+                               [b for _, b, _ in items],
+                               [len(y) for _, _, y in items],
+                               method="selfsync")
+        for (_, _, syms), out in zip(items, outs):
+            assert np.array_equal(np.asarray(out), syms)
+
+    def test_empty_batch(self):
+        assert pp.decode_batch([], [], []) == []
+
+
+class TestDecompressBatch:
+    def test_matches_per_tensor_decompress(self, rng):
+        from repro.core import api
+        from repro.data.pipeline import smooth_field
+
+        cs = [api.compress(smooth_field((40, 30 + 11 * i), seed=i), eb=1e-3)
+              for i in range(4)]
+        outs = api.decompress_batch(cs)
+        for c, out in zip(cs, outs):
+            ref = np.asarray(api.decompress(c, strategy="tuned"))
+            assert np.asarray(out).tobytes() == ref.tobytes()

@@ -19,8 +19,8 @@ SUB = textwrap.dedent("""
     from repro.runtime import sharding as shd
     from repro.optim import adamw
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(data=4, model=2)
     bad = []
     for arch, cfg in configs.REGISTRY.items():
         ps = jax.eval_shape(lambda c=cfg: T.init_model(jax.random.PRNGKey(0), c))

@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import api
@@ -67,6 +68,16 @@ class TestKernelPath:
     def test_kernel_decompress_matches(self, rng):
         x = smooth_field((64, 700), seed=4)
         c = api.compress(x, eb=1e-3)
-        a = np.asarray(api.decompress(c, method="gap", use_kernels=False))
-        b = np.asarray(api.decompress(c, method="gap", use_kernels=True))
+        a = np.asarray(api.decompress(c, method="gap", backend="ref"))
+        b = np.asarray(api.decompress(c, method="gap", backend="pallas"))
+        assert np.array_equal(a, b)
+
+    def test_deprecated_flags_alias_new_api(self, rng):
+        x = smooth_field((32, 200), seed=6)
+        c = api.compress(x, eb=1e-3)
+        a = np.asarray(api.decompress(c, method="gap", backend="ref",
+                                      strategy="padded"))
+        with pytest.warns(DeprecationWarning):
+            b = np.asarray(api.decompress(c, method="gap", use_tiles=False,
+                                          use_kernels=False))
         assert np.array_equal(a, b)
