@@ -21,14 +21,14 @@ def main() -> None:
                     help="subset of datasets / sizes (CI mode)")
     ap.add_argument("--only", default=None,
                     help="comma list: tableI,tableII,tableIV,tableV,"
-                         "fig2,fig4,batch,arch,roofline")
+                         "fig2,fig4,batch,store,arch,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (arch_step, batch_decode, compression_ratio,
                             cr_sensitivity, decode_throughput,
                             decoder_phases, e2e_decompression, roofline,
-                            shmem_tuning)
+                            shmem_tuning, store_throughput)
 
     suites = [
         ("tableV", decode_throughput.run),
@@ -38,6 +38,7 @@ def main() -> None:
         ("fig2", cr_sensitivity.run),
         ("fig4", e2e_decompression.run),
         ("batch", batch_decode.run),
+        ("store", store_throughput.run),
         ("arch", arch_step.run),
         ("roofline", roofline.run),
     ]

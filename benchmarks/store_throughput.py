@@ -1,0 +1,71 @@
+"""Store read throughput: cold vs warm opens, prefetch on vs off.
+
+The restore-at-scale scenario: a multi-chunk ``.szt`` archive streams
+through ``Archive.iter_decode``.  Three effects are measured:
+
+  * **overlap** -- double-buffered reads (a host thread reads + CRC-checks
+    chunk group N+1 while group N decodes) vs strictly serial read->decode;
+  * **plan cache** -- a warm re-open skips every phase 1-3 ``build_plan``
+    (dispatch counter asserted zero rebuilt plans);
+  * **chunking** -- decode dispatches stay per-CR-class per group, not per
+    tensor.
+
+Throughput is reported against decoded quant-code bytes (the paper's
+decoder GB/s definition).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+from benchmarks import common as Cm
+from benchmarks import datasets as DS
+from repro.core import api
+from repro.core.huffman import pipeline as hp
+from repro.store import Archive, PlanCache, write_archive
+
+
+def run(n: int = DS.DEFAULT_N, quick: bool = False):
+    rows = []
+    names = ["HACC"] if quick else ["HACC", "Nyx"]
+    n_chunks = 4 if quick else 8
+    chunk_n = max(n // 8, 1 << 14)
+    be = hp.get_backend("ref")
+    for name in names:
+        entries = []
+        for s in range(n_chunks):
+            x, _ = DS.make_dataset(name, chunk_n)
+            entries.append((f"{name}.{s}",
+                            api.compress(x, eb=1e-3, mode="rel"), "float32"))
+        qb = sum(c.quant_code_bytes for _, c, _ in entries)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "bench.szt")
+            write_archive(path, entries)
+            stored = os.path.getsize(path)
+
+            def read(cache, prefetch):
+                with Archive(path, plan_cache=cache) as ar:
+                    return ar.read_all(group_chunks=2, prefetch=prefetch)
+
+            # Cold opens rebuild plans; fresh cache per call.
+            t_serial = Cm.timeit(lambda: read(PlanCache(), False))
+            t_overlap = Cm.timeit(lambda: read(PlanCache(), True))
+
+            warm = PlanCache()
+            read(warm, True)                     # populate
+            be.reset_stats()
+            t_warm = Cm.timeit(lambda: read(warm, True))
+            rebuilt = be.stats["plan_builds"]
+
+        tag = f"store/{name}/x{n_chunks}"
+        rows.append((f"{tag}/cold_serial", t_serial * 1e6,
+                     f"GBps={Cm.gbps(qb, t_serial):.3f};"
+                     f"stored_MiB={stored / 2**20:.2f}"))
+        rows.append((f"{tag}/cold_overlap", t_overlap * 1e6,
+                     f"GBps={Cm.gbps(qb, t_overlap):.3f};"
+                     f"speedup={t_serial / max(t_overlap, 1e-12):.2f}x"))
+        rows.append((f"{tag}/warm_plan_cache", t_warm * 1e6,
+                     f"GBps={Cm.gbps(qb, t_warm):.3f};"
+                     f"rebuilt_plans={rebuilt}"))
+    return rows

@@ -1,15 +1,18 @@
-"""Sharded checkpointing with optional SZ-compressed float shards.
+"""Sharded checkpointing over the compressed tensor store.
 
-Layout:  <dir>/step_<N>/{manifest.json, <flat-key>.npy | <flat-key>.szblob}
+Layout:  <dir>/step_<N>/{manifest.json, archive.szt, <flat-key>.npy}
 Writes are atomic (tmp dir + rename) so a preempted save can never corrupt
 the restore path -- the fault-tolerance tests kill a training process mid-run
 and restart from ``latest_step``.
 
-Compressed shards use the paper's pipeline (core.sz): error-bounded Lorenzo +
-Huffman with the optimized parallel decoder on restore.  Weights tolerate a
-small bounded perturbation; optimizer moments are stored raw by default
-(configurable).  This is the paper's "compressed snapshot / restart file"
-use case made first-class.
+Compressible float shards are packed into ONE ``repro.store`` archive per
+step (chunked format, deduped codebooks, per-chunk CRC32) instead of N
+loose files; restore streams the archive through the double-buffered
+reader -- disk reads of chunk group N+1 overlap the class-batched decode of
+group N -- and plan-cache hits on a re-restore skip the phase 1-3 rebuild.
+Everything else is a raw ``.npy`` with its checksum recorded in
+``manifest.json``; any corrupt or truncated shard surfaces as
+``CheckpointIntegrityError`` naming the entry, never a numpy parse error.
 """
 
 from __future__ import annotations
@@ -18,12 +21,21 @@ import concurrent.futures as futures
 import json
 import os
 import shutil
+import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api as sz
+from repro.store import Archive, ArchiveWriter, StoreError
+
+ARCHIVE_NAME = "archive.szt"
+MANIFEST_VERSION = 2
+
+
+class CheckpointIntegrityError(RuntimeError):
+    """A checkpoint entry is missing, truncated, or fails its checksum."""
 
 
 def _flatten(tree):
@@ -51,83 +63,40 @@ def _unflatten(flat):
     return tree
 
 
-def _save_blob(path, arr, eb):
-    c = sz.compress(np.asarray(arr, np.float32), eb=eb, mode="rel")
-    np.savez(
-        path,
-        units=np.asarray(c.stream.units),
-        gaps=np.asarray(c.stream.gaps),
-        counts=np.asarray(c.stream.counts),
-        seq_counts=np.asarray(c.stream.seq_counts),
-        total_bits=int(c.stream.total_bits),
-        n_symbols=int(c.stream.n_symbols),
-        subseqs_per_seq=c.stream.subseqs_per_seq,
-        enc_code=c.codebook.enc_code, enc_len=c.codebook.enc_len,
-        dec_sym=c.codebook.dec_sym, dec_len=c.codebook.dec_len,
-        max_len=c.codebook.max_len,
-        outlier_pos=np.asarray(c.outlier_pos),
-        outlier_val=np.asarray(c.outlier_val),
-        shape=np.array(c.shape), eb=c.eb, radius=c.radius,
-        rel_range=c.rel_range, max_abs=c.max_abs,
-        orig_dtype=str(arr.dtype),
-    )
+def _file_crc32(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            buf = f.read(1 << 20)
+            if not buf:
+                return crc & 0xFFFFFFFF
+            crc = zlib.crc32(buf, crc)
 
 
-def _read_blob(path):
-    """Parse a .szblob.npz into (Compressed, original dtype string)."""
-    z = np.load(path)
-    from repro.core.huffman.codebook import Codebook
-    from repro.core.huffman.encode import EncodedStream
-    from repro.core.sz.compressor import Compressed
+class _CrcTee:
+    """File-object wrapper that CRCs bytes as they are written, so the raw
+    save path never re-reads what it just wrote."""
 
-    stream = EncodedStream(
-        units=jnp.asarray(z["units"]), gaps=jnp.asarray(z["gaps"]),
-        counts=jnp.asarray(z["counts"]),
-        seq_counts=jnp.asarray(z["seq_counts"]),
-        total_bits=jnp.asarray(z["total_bits"]),
-        n_symbols=jnp.asarray(z["n_symbols"]),
-        subseqs_per_seq=int(z["subseqs_per_seq"]))
-    book = Codebook(
-        n_symbols=len(z["enc_code"]), max_len=int(z["max_len"]),
-        enc_code=z["enc_code"], enc_len=z["enc_len"],
-        dec_sym=z["dec_sym"], dec_len=z["dec_len"])
-    c = Compressed(
-        stream=stream, codebook=book,
-        outlier_pos=jnp.asarray(z["outlier_pos"]),
-        outlier_val=jnp.asarray(z["outlier_val"]),
-        shape=tuple(int(s) for s in z["shape"]),
-        dtype=np.dtype(str(z["orig_dtype"])) if str(z["orig_dtype"]) != "bfloat16"
-        else np.dtype(np.float32),
-        eb=float(z["eb"]), radius=int(z["radius"]),
-        rel_range=float(z["rel_range"]), max_abs=float(z["max_abs"]))
-    return c, str(z["orig_dtype"])
+    def __init__(self, f):
+        self._f = f
+        self.crc = 0
 
+    def write(self, buf):
+        self.crc = zlib.crc32(buf, self.crc) & 0xFFFFFFFF
+        return self._f.write(buf)
 
-def _load_blob(path, method="gap"):
-    c, orig_dtype = _read_blob(path)
-    x = sz.decompress(c, method=method)
-    return jnp.asarray(x, jnp.dtype(orig_dtype))
-
-
-def _load_blobs_batched(paths, method="gap"):
-    """Restore many compressed shards with class-batched decode.
-
-    All shards decode through ``sz.decompress_batch`` -- one Huffman
-    decode-write dispatch per CR class across the whole checkpoint instead
-    of one tuned decode per shard.
-    """
-    blobs = [_read_blob(p) for p in paths]
-    xs = sz.decompress_batch([c for c, _ in blobs], method=method)
-    return [jnp.asarray(x, jnp.dtype(dt))
-            for x, (_, dt) in zip(xs, blobs)]
+    def __getattr__(self, name):
+        return getattr(self._f, name)
 
 
 class CheckpointManager:
     def __init__(self, directory: str, compress_eb: float | None = None,
-                 compress_min_size: int = 65536, asynchronous: bool = False):
+                 compress_min_size: int = 65536, asynchronous: bool = False,
+                 decode_backend: str = "ref"):
         self.dir = directory
         self.eb = compress_eb
         self.min_size = compress_min_size
+        self.decode_backend = decode_backend
         os.makedirs(directory, exist_ok=True)
         self._pool = futures.ThreadPoolExecutor(1) if asynchronous else None
         self._pending = None
@@ -149,26 +118,44 @@ class CheckpointManager:
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        manifest = {"step": step, "entries": {}, "extra": extra or {}}
+        manifest = {"version": MANIFEST_VERSION, "step": step,
+                    "entries": {}, "extra": extra or {}}
         trees = {"params": params}
         if opt_state is not None:
             trees["opt"] = opt_state
-        for tname, tree in trees.items():
-            for key, leaf in _flatten(tree).items():
-                arr = np.asarray(leaf)
-                fname = f"{tname}.{key}"
-                compressible = (self.eb is not None
-                                and arr.dtype in (np.float32,)
-                                and arr.size >= self.min_size)
-                if compressible:
-                    _save_blob(os.path.join(tmp, fname + ".szblob.npz"),
-                               arr, self.eb)
-                    manifest["entries"][fname] = {"kind": "sz"}
-                else:
-                    np.save(os.path.join(tmp, fname + ".npy"),
-                            arr, allow_pickle=False)
-                    manifest["entries"][fname] = {
-                        "kind": "raw", "dtype": str(arr.dtype)}
+        writer = None
+        try:
+            for tname, tree in trees.items():
+                for key, leaf in _flatten(tree).items():
+                    arr = np.asarray(leaf)
+                    fname = f"{tname}.{key}"
+                    compressible = (self.eb is not None
+                                    and arr.dtype in (np.float32,)
+                                    and arr.size >= self.min_size)
+                    if compressible:
+                        if writer is None:
+                            writer = ArchiveWriter(
+                                os.path.join(tmp, ARCHIVE_NAME))
+                        writer.add(fname,
+                                   sz.compress(arr, eb=self.eb, mode="rel"),
+                                   orig_dtype=str(arr.dtype))
+                        manifest["entries"][fname] = {"kind": "sz"}
+                    else:
+                        path = os.path.join(tmp, fname + ".npy")
+                        with open(path, "wb") as f:
+                            tee = _CrcTee(f)
+                            np.save(tee, arr, allow_pickle=False)
+                        manifest["entries"][fname] = {
+                            "kind": "raw", "dtype": str(arr.dtype),
+                            "checksum": tee.crc}
+        except BaseException:
+            if writer is not None:
+                writer.abort()
+            raise
+        if writer is not None:
+            for fname, crc in writer.checksums().items():
+                manifest["entries"][fname]["checksum"] = crc
+            writer.close()
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         shutil.rmtree(final, ignore_errors=True)
@@ -186,6 +173,53 @@ class CheckpointManager:
                  if d.startswith("step_") and not d.endswith(".tmp")]
         return max(steps) if steps else None
 
+    def _restore_archive(self, d: str, step: int, manifest) -> dict:
+        """Decode every compressed entry of a step's archive (integrity-
+        checked, plan-cached, I/O overlapped with decode)."""
+        sz_entries = {fname: meta for fname, meta in
+                      manifest["entries"].items() if meta["kind"] == "sz"}
+        if not sz_entries:
+            return {}
+        apath = os.path.join(d, ARCHIVE_NAME)
+        if not os.path.exists(apath):
+            raise CheckpointIntegrityError(
+                f"step {step}: manifest lists {len(sz_entries)} compressed "
+                f"entries but {ARCHIVE_NAME} is missing")
+        try:
+            with Archive(apath) as ar:
+                for fname, meta in sz_entries.items():
+                    if fname not in ar:
+                        raise CheckpointIntegrityError(
+                            f"step {step}: entry {fname!r} missing from "
+                            f"{ARCHIVE_NAME}")
+                    want = meta.get("checksum")
+                    if want is not None and ar.chunk(fname).crc32 != want:
+                        raise CheckpointIntegrityError(
+                            f"step {step}: entry {fname!r} checksum in "
+                            f"manifest.json disagrees with {ARCHIVE_NAME}")
+                return ar.read_all(list(sz_entries),
+                                   backend=self.decode_backend)
+        except StoreError as e:
+            raise CheckpointIntegrityError(
+                f"step {step}: {ARCHIVE_NAME} is corrupt or truncated: "
+                f"{e}") from e
+
+    def _restore_raw(self, d: str, step: int, fname: str, meta):
+        path = os.path.join(d, fname + ".npy")
+        if not os.path.exists(path):
+            raise CheckpointIntegrityError(
+                f"step {step}: raw shard {fname!r} is missing")
+        want = meta.get("checksum")
+        if want is not None and _file_crc32(path) != want:
+            raise CheckpointIntegrityError(
+                f"step {step}: raw shard {fname!r} failed its checksum "
+                f"(corrupt or truncated file)")
+        try:
+            return jnp.asarray(np.load(path, allow_pickle=False))
+        except ValueError as e:
+            raise CheckpointIntegrityError(
+                f"step {step}: raw shard {fname!r} is unreadable: {e}") from e
+
     def restore(self, step: int | None = None):
         step = step if step is not None else self.latest_step()
         if step is None:
@@ -193,19 +227,25 @@ class CheckpointManager:
         d = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
+        version = manifest.get("version", 1)
+        if version > MANIFEST_VERSION:
+            raise CheckpointIntegrityError(
+                f"step {step}: manifest version {version} is newer than this "
+                f"reader (supports <= {MANIFEST_VERSION})")
+        if version < MANIFEST_VERSION and any(
+                m["kind"] == "sz" for m in manifest["entries"].values()):
+            raise CheckpointIntegrityError(
+                f"step {step}: checkpoint uses the pre-store manifest "
+                f"version {version} (loose .szblob.npz shards); re-save it "
+                f"with this manager's writer -- it is not corrupt")
         trees: dict = {"params": {}, "opt": {}}
-        sz_names = [fname for fname, meta in manifest["entries"].items()
-                    if meta["kind"] == "sz"]
-        sz_arrays = _load_blobs_batched(
-            [os.path.join(d, fname + ".szblob.npz") for fname in sz_names])
-        sz_restored = dict(zip(sz_names, sz_arrays))
+        sz_restored = self._restore_archive(d, step, manifest)
         for fname, meta in manifest["entries"].items():
             tname, key = fname.split(".", 1)
             if meta["kind"] == "sz":
                 arr = sz_restored[fname]
             else:
-                arr = jnp.asarray(
-                    np.load(os.path.join(d, fname + ".npy")))
+                arr = self._restore_raw(d, step, fname, meta)
             trees.setdefault(tname, {})[key] = arr
         params = _unflatten(trees["params"])
         opt = _unflatten(trees["opt"]) if trees.get("opt") else None

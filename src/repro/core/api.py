@@ -1,10 +1,14 @@
 """Public compression API used by the framework features.
 
-Two framework consumers ride on this module (see README.md for the
+Framework consumers ride on this module (see README.md for the
 architecture of the plan/execute decode stack):
-  * checkpoint/manager.py  -- compressed checkpoint shards; restore decodes
-                              all shards through ``decompress_batch``
-  * models/kvcache.py      -- compressed KV-cache blocks, also batch-decoded
+  * repro/store            -- chunked ``.szt`` archives; the reader decodes
+                              chunk groups through ``decompress_batch`` with
+                              cached plans and prefetched reads
+  * checkpoint/manager.py  -- compressed checkpoint shards, one store
+                              archive per step
+  * models/kvcache.py      -- compressed KV-cache blocks, batch-decoded and
+                              pageable via ``repro.store.KVPager``
 
 Decoding is served by ``repro.core.huffman.pipeline``: ``build_plan`` runs
 the sync/count/prefix-sum phases and CR classification, ``decode`` executes

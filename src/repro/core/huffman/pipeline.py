@@ -120,8 +120,8 @@ def make_plan(stream, seq_counts, subseqs_per_seq: int,
               t_high: int = T_HIGH_DEFAULT) -> ClassPlan:
     """Build the per-CR-class dispatch plan from per-sequence symbol counts.
 
-    ``stream`` is accepted (and ignored) for signature compatibility with
-    the pre-pipeline ``tuning.make_plan``.
+    ``stream`` is accepted (and ignored) so callers that already hold the
+    encoded stream can pass it alongside its metadata unchanged.
     """
     del stream
     ratios = sequence_ratios(jnp.asarray(seq_counts), subseqs_per_seq)
@@ -164,10 +164,12 @@ class DecodeBackend:
     tiles_fn: Callable
     padded_fn: Callable
     stats: dict = dataclasses.field(
-        default_factory=lambda: {"decode_write_dispatches": 0})
+        default_factory=lambda: {"decode_write_dispatches": 0,
+                                 "plan_builds": 0})
 
     def reset_stats(self):
-        self.stats["decode_write_dispatches"] = 0
+        for k in self.stats:
+            self.stats[k] = 0
 
     # Counted dispatch wrappers: every phase-4 launch goes through these.
     def decode_tiles(self, *args, **kwargs):
@@ -313,6 +315,7 @@ def build_plan(stream: EncodedStream, codebook, method: str = "gap",
                early_exit: bool = True) -> DecoderPlan:
     """Run phases 1-3 on ``backend`` and classify sequences by CR."""
     be = get_backend(backend)
+    be.stats["plan_builds"] += 1
     luts = _as_luts(codebook)
     units = jnp.asarray(stream.units)
     n_subseq = stream.n_subseq
@@ -542,9 +545,10 @@ def execute_tuned(stream: EncodedStream, dec_sym, dec_len, max_len: int,
                   t_high: int = T_HIGH_DEFAULT, tiles_fn=None) -> jnp.ndarray:
     """Tuned per-class decode from precomputed phase 1-3 outputs.
 
-    Compatibility surface for the pre-pipeline ``tuning.decode_tuned``:
-    ``tiles_fn`` defaults to the jnp reference tile decoder and may be any
-    ``decode_write_tiles``-shaped callable (e.g. the Pallas kernel wrapper).
+    Raw-LUT entry point for callers that hold decode tables instead of a
+    ``Codebook``: ``tiles_fn`` defaults to the jnp reference tile decoder
+    and may be any ``decode_write_tiles``-shaped callable (e.g. the Pallas
+    kernel wrapper).
     """
     if tiles_fn is None:
         tiles_fn = hd.decode_write_tiles

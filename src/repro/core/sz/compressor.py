@@ -200,6 +200,7 @@ def decompress_batch(
     *,
     backend: str = "ref",
     t_high: int = hp.T_HIGH_DEFAULT,
+    plans: "list | None" = None,
 ) -> list:
     """Decompress many tensors with class-batched decode dispatch.
 
@@ -207,11 +208,14 @@ def decompress_batch(
     (``pipeline.decode_batch``) instead of once per class per tensor --
     the dispatch structure that makes restoring N checkpoint shards or
     KV-cache blocks scale with class count, not tensor count.  Output is
-    bit-exact with per-tensor ``decompress``.
+    bit-exact with per-tensor ``decompress``.  ``plans`` may carry prebuilt
+    (e.g. cached) ``DecoderPlan`` objects, one per tensor, in which case the
+    phase 1-3 rebuild is skipped entirely (the store's plan cache rides on
+    this).
     """
     if not cs:
         return []
     codes = hp.decode_batch([c.stream for c in cs], [c.codebook for c in cs],
                             [c.n_symbols for c in cs], method=method,
-                            backend=backend, t_high=t_high)
+                            backend=backend, t_high=t_high, plans=plans)
     return [_dequantize(c, q) for c, q in zip(cs, codes)]

@@ -14,7 +14,6 @@ import numpy as np
 
 from repro.core.huffman import decode as hd
 from repro.core.huffman.bits import SUBSEQ_BITS
-from repro.core.huffman.encode import EncodedStream
 from repro.kernels import common as C
 from repro.kernels import histogram as _hist
 from repro.kernels import huffman_decode as _dec
@@ -170,27 +169,6 @@ def selfsync_sync(units, dec_sym, dec_len, total_bits, n_subseq: int,
 
     start_abs = boundaries + start.reshape(-1)
     return start_abs, counts.reshape(-1), total_rounds
-
-
-def decode_pipeline(stream: EncodedStream, dec_sym, dec_len, max_len: int,
-                    n_out: int, method: str = "gap", tile_syms: int = 4096,
-                    interpret: bool = True, tuned: bool = False,
-                    early_exit: bool = True):
-    """DEPRECATED full kernel-path decoder.
-
-    Thin shim over ``core.huffman.pipeline.decode(backend="pallas")``, kept
-    for callers that hold raw LUTs instead of a ``Codebook``.  New code
-    should call the pipeline API directly.
-    """
-    from repro.core.huffman import pipeline as pp
-
-    luts = pp.DecodeLuts(dec_sym=jnp.asarray(dec_sym),
-                         dec_len=jnp.asarray(dec_len), max_len=max_len)
-    return pp.decode(stream, luts, n_out, method=method,
-                     strategy="tuned" if tuned else "tile",
-                     tile_syms=tile_syms,
-                     backend="pallas" if interpret else "pallas-compiled",
-                     early_exit=early_exit)
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,6 @@ import jax.numpy as jnp
 
 from repro.core.huffman import decode as hd
 from repro.core.huffman.bits import SUBSEQ_BITS
-from repro.core.huffman.encode import EncodedStream
 from repro.core.sz import lorenzo as _lor
 
 
@@ -48,17 +47,6 @@ def selfsync_sync(units, dec_sym, dec_len, total_bits, n_subseq: int,
     _, counts = hd.subseq_scan(units, dec_sym, dec_len, start,
                                boundaries + SUBSEQ_BITS, total_bits, max_len)
     return start, counts
-
-
-def decode_pipeline(stream: EncodedStream, dec_sym, dec_len, max_len: int,
-                    n_out: int, method: str = "gap", tile_syms: int = 4096):
-    if method == "gap":
-        return hd.decode_gap_array(stream, dec_sym, dec_len, max_len, n_out,
-                                   tile_syms=tile_syms)
-    if method == "selfsync":
-        return hd.decode_selfsync(stream, dec_sym, dec_len, max_len, n_out,
-                                  tile_syms=tile_syms)
-    raise ValueError(method)
 
 
 def histogram(x, nbins: int):

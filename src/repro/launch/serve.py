@@ -6,9 +6,17 @@ the prompt-phase cache with the SZ pipeline and restore it through the
 optimized parallel Huffman decoder -> continue decoding.  Reports tokens/s,
 cache compression ratio, and the decode-path error introduced.
 
+``--kv-offload`` instead pages the prompt KV blocks *through the
+compressed tensor store*: prefix blocks are evicted to ``.szt`` archives
+(``repro.store.KVPager``) and demand-paged back before generation; repeat
+page-ins of a block hit the plan cache, so steady-state paging is pure
+phase-4 decode.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --batch 4 --prompt-len 32 --gen-len 32 --compress-kv --kv-eb 1e-3
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --kv-offload --kv-block 16 --kv-offload-dir /tmp/kv_blocks
 """
 
 from __future__ import annotations
@@ -37,6 +45,14 @@ def main(argv=None):
     ap.add_argument("--kv-len", type=int, default=None)
     ap.add_argument("--compress-kv", action="store_true")
     ap.add_argument("--kv-eb", type=float, default=1e-3)
+    ap.add_argument("--kv-offload", action="store_true",
+                    help="page prompt KV blocks out to store archives and "
+                         "demand-page them back before generation")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="tokens per offloaded KV block")
+    ap.add_argument("--kv-offload-dir", default=None,
+                    help="directory for KV block archives "
+                         "(default: a temp dir)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -78,9 +94,48 @@ def main(argv=None):
         logits, cache = serve(params, prompt[:, t:t + 1], cache, jnp.int32(t))
     t_prefill = time.time() - t0
 
-    # --- optional cache compress/restore round trip ------------------------
+    # --- optional KV paging through the compressed tensor store -----------
     ratio = None
     kv_err = 0.0
+    page_stats = None
+    if args.kv_offload:
+        import tempfile
+
+        from repro.models.kvcache import (KVPager, offload_prefix,
+                                          page_in_blocks)
+
+        # Only tensors with a kv_len sequence axis at axis 2 are pageable
+        # (ssm/rwkv recurrent states have no token axis to evict).
+        keys = [k for k in cache
+                if k in ("k", "v", "latent", "k_scale", "v_scale")]
+        offload_dir = args.kv_offload_dir or tempfile.mkdtemp(
+            prefix="kv_blocks_")
+        pager = KVPager(offload_dir, eb=args.kv_eb)
+        snapshot = {k: np.asarray(cache[k], np.float32) for k in keys}
+        t0 = time.time()
+        cache, block_ids = offload_prefix(cache, pager, args.prompt_len,
+                                          block_tokens=args.kv_block,
+                                          keys=keys)
+        t_out = time.time() - t0
+        t0 = time.time()
+        cache = page_in_blocks(cache, pager, block_ids)
+        t_in = time.time() - t0
+        paged = set()
+        for bid in block_ids:
+            paged |= set(pager.block_meta(bid)["names"])
+        for name in paged:
+            kv_err = max(kv_err, float(np.max(np.abs(
+                np.asarray(cache[name], np.float32) - snapshot[name]))))
+        ratio = pager.ratio
+        page_stats = dict(pager.stats)
+        print(f"[serve] kv offload: {len(block_ids)} blocks x "
+              f"{args.kv_block} toks -> {offload_dir} "
+              f"({pager.stats['bytes_raw']/2**20:.2f} MiB raw, "
+              f"{pager.stats['bytes_compressed']/2**20:.2f} MiB stored, "
+              f"ratio {ratio:.2f}x); page-out {t_out:.2f}s, "
+              f"page-in {t_in:.2f}s, max err {kv_err:.2e}")
+
+    # --- optional cache compress/restore round trip ------------------------
     if args.compress_kv:
         skip = tuple(k for k in cache if k in ("xk", "xv"))
         cc = kvcache.compress_cache(
@@ -109,7 +164,7 @@ def main(argv=None):
     print(f"[serve] prefill {args.prompt_len} toks in {t_prefill:.2f}s; "
           f"generated {toks} tokens in {t_gen:.2f}s "
           f"({toks / max(t_gen, 1e-9):.1f} tok/s)")
-    return {"ratio": ratio, "kv_err": kv_err,
+    return {"ratio": ratio, "kv_err": kv_err, "page_stats": page_stats,
             "tokens": np.asarray(jnp.concatenate(out_tokens, axis=1))}
 
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api as sz
+from repro.store.paging import KVPager  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass
@@ -69,5 +70,36 @@ def decompress_cache(cc: CompressedCache, method: str = "gap",
     names = list(cc.blobs)
     xs = sz.decompress_batch([cc.blobs[n] for n in names], method=method,
                              backend=backend)
-    return {n: jnp.asarray(np.asarray(x), jnp.dtype(cc.orig_dtypes[n]))
+    # Cast on device: decode_batch already produced device arrays, so the
+    # dtype cast must not bounce them through host memory.
+    return {n: jnp.asarray(x, jnp.dtype(cc.orig_dtypes[n]))
             for n, x in zip(names, xs)}
+
+
+# ---------------------------------------------------------------------------
+# Block paging through the compressed tensor store (serve --kv-offload)
+# ---------------------------------------------------------------------------
+
+
+def offload_prefix(cache: dict, pager: KVPager, n_tokens: int,
+                   block_tokens: int = 64, keys=None):
+    """Evict tokens [0, n_tokens) of the cache in fixed-size blocks.
+
+    Each block becomes one store archive (one chunk per cache tensor,
+    codebooks deduped); the evicted region of ``cache`` is zeroed.  Returns
+    ``(cache, block_ids)`` in eviction order.
+    """
+    ids = []
+    for lo in range(0, n_tokens, block_tokens):
+        cache, bid = pager.offload(cache, lo, min(lo + block_tokens,
+                                                  n_tokens), keys=keys)
+        ids.append(bid)
+    return cache, ids
+
+
+def page_in_blocks(cache: dict, pager: KVPager, block_ids) -> dict:
+    """Restore offloaded blocks into the cache (demand paging: call with
+    whatever blocks the next attention window needs)."""
+    for bid in block_ids:
+        cache = pager.page_in(cache, bid)
+    return cache

@@ -1,0 +1,25 @@
+"""Compressed tensor store: chunked ``.szt`` archives + plan cache + paging.
+
+Public surface:
+  * ``ArchiveWriter`` / ``write_archive``  -- build an archive (codebooks
+    deduped by digest, per-chunk CRC32, atomic publish).
+  * ``Archive`` / ``open_archive``         -- mmap reader; ``read_all`` /
+    ``iter_decode`` overlap disk reads with batched device decode.
+  * ``PlanCache`` / ``DEFAULT_PLAN_CACHE`` -- digest-keyed plan + LUT reuse
+    across opens (restore, serving restarts, KV page-ins).
+  * ``KVPager``                            -- evict / restore KV-cache token
+    ranges through archives.
+  * ``StoreError`` hierarchy               -- ``StoreVersionError`` for
+    incompatible archives, ``StoreCorruptError`` for truncation/checksum.
+"""
+
+from repro.store.cache import DEFAULT_PLAN_CACHE, PlanCache  # noqa: F401
+from repro.store.format import (  # noqa: F401
+    FORMAT_VERSION,
+    StoreCorruptError,
+    StoreError,
+    StoreVersionError,
+)
+from repro.store.paging import KVPager  # noqa: F401
+from repro.store.reader import Archive, open_archive  # noqa: F401
+from repro.store.writer import ArchiveWriter, write_archive  # noqa: F401

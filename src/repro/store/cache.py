@@ -1,0 +1,84 @@
+"""Plan / LUT cache: make the second open of an archive metadata-free.
+
+Two maps, both keyed by content digests from ``store.format``:
+
+* **codebooks** -- codebook digest -> materialized ``Codebook`` (decode LUT
+  included).  The archive stores only the tiny encoder tables; the
+  ``2**max_len``-entry decode LUT is derived on first use and shared by
+  every chunk (and every archive) with the same histogram.
+* **plans** -- (chunk digest, method, t_high) -> ``DecoderPlan``.  A chunk
+  digest names the *decode problem* (payload bytes + framing + codebook),
+  so a cached plan is valid for any archive containing that chunk --
+  serving restarts and KV page-ins skip the phase 1-3 sync/count/prefix-sum
+  rebuild entirely.  Plans are backend-portable (asserted by the pipeline
+  tests), so the key deliberately omits the backend.
+
+The cache is bounded (LRU on plans) because KV paging can stream an
+unbounded number of distinct blocks through one process.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+
+
+class PlanCache:
+    def __init__(self, max_plans: int = 4096):
+        self.max_plans = max_plans
+        self._books: dict = {}
+        self._plans: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = {"plan_hits": 0, "plan_misses": 0,
+                      "lut_hits": 0, "lut_misses": 0}
+
+    # -- codebooks / LUTs ---------------------------------------------------
+
+    def get_codebook(self, digest: str, build_fn):
+        """Return the cached ``Codebook`` for ``digest``, building via
+        ``build_fn()`` on first use."""
+        with self._lock:
+            book = self._books.get(digest)
+            if book is not None:
+                self.stats["lut_hits"] += 1
+                return book
+            self.stats["lut_misses"] += 1
+        book = build_fn()
+        with self._lock:
+            return self._books.setdefault(digest, book)
+
+    # -- plans ----------------------------------------------------------------
+
+    def get_plan(self, key):
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._plans.move_to_end(key)
+                self.stats["plan_hits"] += 1
+            else:
+                self.stats["plan_misses"] += 1
+            return plan
+
+    def put_plan(self, key, plan):
+        with self._lock:
+            self._plans[key] = plan
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.max_plans:
+                self._plans.popitem(last=False)
+
+    def clear(self):
+        with self._lock:
+            self._books.clear()
+            self._plans.clear()
+
+    def reset_stats(self):
+        with self._lock:
+            for k in self.stats:
+                self.stats[k] = 0
+
+    def __len__(self):
+        return len(self._plans)
+
+
+#: Process-wide default used by ``Archive`` / ``KVPager`` unless overridden.
+DEFAULT_PLAN_CACHE = PlanCache()

@@ -1,0 +1,138 @@
+"""KV-cache block paging through the compressed tensor store.
+
+The serving cache (``models/decode``: k/v of shape (L, B, S, H, D)) is
+large, cold outside the active attention window, and tolerant of bounded
+error -- the paper's in-memory-compression profile.  ``KVPager`` evicts a
+token range of every pageable cache tensor into one ``.szt`` archive
+(one chunk per tensor, codebooks deduped across K/V) and pages it back on
+demand with the batched decoder.  Repeated page-ins of the same block hit
+the plan cache, so the steady-state page-in cost is pure phase-4 decode.
+
+The paged region is zeroed after eviction: attention over masked-out
+positions never reads it, and the zeros compress to nothing if the block
+is re-offloaded.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sz import compressor as sz
+from repro.store.cache import DEFAULT_PLAN_CACHE, PlanCache
+from repro.store.reader import Archive
+from repro.store.writer import ArchiveWriter
+
+
+def _pageable(name: str, arr, seq_axis: int, hi: int) -> bool:
+    dt = np.dtype(str(arr.dtype)) if str(arr.dtype) != "bfloat16" else None
+    is_float = (dt is None or np.issubdtype(dt, np.floating))
+    return (is_float and getattr(arr, "ndim", 0) > seq_axis
+            and arr.shape[seq_axis] >= hi)
+
+
+class KVPager:
+    """Evict / restore token ranges of a decode cache via store archives."""
+
+    def __init__(self, directory: str, *, eb: float = 1e-3,
+                 method: str = "gap", backend: str = "ref",
+                 seq_axis: int = 2,
+                 plan_cache: "PlanCache | None" = None):
+        self.dir = directory
+        self.eb = eb
+        self.method = method
+        self.backend = backend
+        self.seq_axis = seq_axis
+        self.cache = DEFAULT_PLAN_CACHE if plan_cache is None else plan_cache
+        os.makedirs(directory, exist_ok=True)
+        self._blocks: dict = {}
+        self._next_id = 0
+        self.stats = {"pages_out": 0, "pages_in": 0,
+                      "bytes_raw": 0, "bytes_compressed": 0}
+
+    def _span(self, lo: int, hi: int):
+        return (slice(None),) * self.seq_axis + (slice(lo, hi),)
+
+    def block_path(self, block_id: int) -> str:
+        return os.path.join(self.dir, f"block_{block_id:06d}.szt")
+
+    @property
+    def resident_blocks(self) -> list:
+        return sorted(self._blocks)
+
+    def block_meta(self, block_id: int) -> dict:
+        """{"path", "lo", "hi", "names"} of one offloaded block."""
+        return dict(self._blocks[block_id])
+
+    # -- eviction -----------------------------------------------------------
+
+    def offload(self, cache: dict, lo: int, hi: int, keys=None):
+        """Compress tokens [lo, hi) of each pageable tensor to one archive.
+
+        Returns ``(cache, block_id)`` where ``cache`` has the paged region
+        zeroed for every tensor that was written.  ``keys`` defaults to all
+        float tensors with a sequence axis covering the range.
+        """
+        if hi <= lo:
+            raise ValueError(f"empty page range [{lo}, {hi})")
+        candidates = cache if keys is None else keys
+        keys = [k for k in candidates
+                if _pageable(k, cache[k], self.seq_axis, hi)]
+        if not keys:
+            raise ValueError("no pageable cache tensors for range "
+                             f"[{lo}, {hi})")
+        block_id = self._next_id
+        self._next_id += 1
+        span = self._span(lo, hi)
+        path = self.block_path(block_id)
+        raw_bytes = 0
+        with ArchiveWriter(path) as w:
+            for k in keys:
+                arr = cache[k]
+                block = np.asarray(arr[span], np.float32)
+                raw_bytes += block.size * np.dtype(
+                    str(arr.dtype) if str(arr.dtype) != "bfloat16"
+                    else np.float32).itemsize
+                w.add(k, sz.compress(block, eb=self.eb, mode="rel"),
+                      orig_dtype=str(arr.dtype))
+                cache[k] = arr.at[span].set(0)
+        self._blocks[block_id] = {"path": path, "lo": lo, "hi": hi,
+                                  "names": keys}
+        self.stats["pages_out"] += 1
+        self.stats["bytes_raw"] += raw_bytes
+        self.stats["bytes_compressed"] += os.path.getsize(path)
+        return cache, block_id
+
+    # -- page-in ------------------------------------------------------------
+
+    def fetch(self, block_id: int) -> dict:
+        """Decode a block's tensors (device arrays), without touching any
+        cache.  Plan-cache hits make repeat fetches phase-4 only."""
+        meta = self._blocks[block_id]
+        with Archive(meta["path"], plan_cache=self.cache) as ar:
+            out = ar.read_all(meta["names"], method=self.method,
+                              backend=self.backend)
+        self.stats["pages_in"] += 1
+        return out
+
+    def page_in(self, cache: dict, block_id: int) -> dict:
+        """Restore a block into ``cache`` at its original token range."""
+        meta = self._blocks[block_id]
+        span = self._span(meta["lo"], meta["hi"])
+        for k, block in self.fetch(block_id).items():
+            cache[k] = cache[k].at[span].set(
+                jnp.asarray(block, cache[k].dtype))
+        return cache
+
+    def drop(self, block_id: int):
+        """Forget a block and delete its archive."""
+        meta = self._blocks.pop(block_id)
+        if os.path.exists(meta["path"]):
+            os.unlink(meta["path"])
+
+    @property
+    def ratio(self) -> float:
+        return self.stats["bytes_raw"] / max(self.stats["bytes_compressed"],
+                                             1)

@@ -1,0 +1,247 @@
+"""mmap-backed archive reader with double-buffered read + decode.
+
+Opening an archive is two small reads (header, index) over an ``mmap``;
+chunk payloads are zero-copy ``np.frombuffer`` views into the map, so the
+host never materializes the archive twice.  Every read validates the
+chunk's CRC32 before the bytes reach the decoder, turning silent disk /
+transfer corruption into a ``StoreCorruptError`` that names the tensor.
+
+The batched read path (``iter_decode`` / ``read_all``) is the store's
+performance surface: chunks are decoded in groups through
+``decompress_batch`` (one decode-write dispatch per CR class per group),
+while a single prefetch thread reads + CRC-validates group N+1 from disk
+as the device decodes group N -- the classic double buffer, so cold-cache
+restore time approaches max(I/O, decode) instead of their sum.  Phase 1-3
+plans come from the ``PlanCache`` keyed by chunk digest; a warm cache
+(serving restart, repeated KV page-in) rebuilds zero plans, observable via
+``DecodeBackend.stats["plan_builds"]``.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as futures
+import mmap
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.huffman import codebook as cb
+from repro.core.huffman import pipeline as hp
+from repro.core.huffman.encode import EncodedStream
+from repro.core.sz import compressor as sz
+from repro.store import format as F
+from repro.store.cache import DEFAULT_PLAN_CACHE, PlanCache
+
+DEFAULT_GROUP_CHUNKS = 8
+
+
+def _build_codebook(rec: F.CodebookRecord, enc_code, enc_len) -> cb.Codebook:
+    dec_sym, dec_len = cb.build_decode_lut(enc_code, enc_len, rec.max_len)
+    return cb.Codebook(n_symbols=rec.n_symbols, max_len=rec.max_len,
+                       enc_code=np.array(enc_code),
+                       enc_len=np.array(enc_len),
+                       dec_sym=dec_sym, dec_len=dec_len)
+
+
+class Archive:
+    """One open ``.szt`` archive (use as a context manager)."""
+
+    def __init__(self, path: str, *, plan_cache: "PlanCache | None" = None):
+        self.path = path
+        self.cache = DEFAULT_PLAN_CACHE if plan_cache is None else plan_cache
+        size = os.path.getsize(path)
+        self._f = open(path, "rb")
+        try:
+            if size < F.HEADER_SIZE:
+                raise F.StoreCorruptError(
+                    f"{path}: truncated archive ({size} bytes)")
+            self._mm = mmap.mmap(self._f.fileno(), 0, access=mmap.ACCESS_READ)
+            head = F.unpack_header(self._mm[:F.HEADER_SIZE])
+            lo, n = head["index_off"], head["index_len"]
+            if lo + n > size:
+                raise F.StoreCorruptError(
+                    f"{path}: truncated archive (index extends to byte "
+                    f"{lo + n} of a {size}-byte file)")
+            index = self._mm[lo:lo + n]
+            if F.crc32_arrays(np.frombuffer(index, np.uint8)) != \
+                    head["index_crc"]:
+                raise F.StoreCorruptError(f"{path}: index checksum mismatch")
+            self._codebooks, chunks = F.unpack_index(index)
+            self._cb_by_digest = {c.digest: c for c in self._codebooks}
+            self._chunks = {c.name: c for c in chunks}
+            if len(self._chunks) != head["n_chunks"]:
+                raise F.StoreCorruptError(
+                    f"{path}: header declares {head['n_chunks']} chunks, "
+                    f"index holds {len(self._chunks)}")
+        except BaseException:
+            self._f.close()
+            raise
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def names(self) -> list:
+        return list(self._chunks)
+
+    def __len__(self):
+        return len(self._chunks)
+
+    def __contains__(self, name):
+        return name in self._chunks
+
+    def chunk(self, name: str) -> F.ChunkRecord:
+        try:
+            return self._chunks[name]
+        except KeyError:
+            raise KeyError(f"{self.path}: no chunk named {name!r}") from None
+
+    @property
+    def n_codebooks(self) -> int:
+        return len(self._codebooks)
+
+    # -- raw access ---------------------------------------------------------
+
+    def _blob(self, ref: F.BlobRef, dtype) -> np.ndarray:
+        if ref.offset + ref.length > len(self._mm):
+            raise F.StoreCorruptError(
+                f"{self.path}: blob at {ref.offset}+{ref.length} extends "
+                f"past end of file")
+        return np.frombuffer(self._mm, dtype=dtype, count=ref.length
+                             // np.dtype(dtype).itemsize, offset=ref.offset)
+
+    def codebook(self, digest: str) -> cb.Codebook:
+        rec = self._cb_by_digest[digest]
+
+        def build():
+            enc_code = self._blob(rec.enc_code, np.uint32)
+            enc_len = self._blob(rec.enc_len, np.uint8)
+            if F.crc32_arrays(enc_code, enc_len) != rec.crc32:
+                raise F.StoreCorruptError(
+                    f"{self.path}: codebook {digest[:12]} checksum mismatch")
+            return _build_codebook(rec, enc_code, enc_len)
+
+        return self.cache.get_codebook(digest, build)
+
+    def read_chunk(self, name: str, validate: bool = True):
+        """Read (and optionally CRC-check) one chunk into a ``Compressed``.
+
+        Host-side only -- this is the half the prefetch thread runs.
+        """
+        rec = self.chunk(name)
+        units = self._blob(rec.units, np.uint32)
+        gaps = self._blob(rec.gaps, np.uint8)
+        opos = self._blob(rec.outlier_pos, np.int32)
+        oval = self._blob(rec.outlier_val, np.int32)
+        if validate and F.crc32_arrays(units, gaps, opos, oval) != rec.crc32:
+            raise F.StoreCorruptError(
+                f"{self.path}: chunk {name!r} payload checksum mismatch "
+                f"(corrupt or truncated archive)")
+        # Copy out of the map before device placement: on the CPU backend
+        # jax aliases numpy buffers zero-copy, which would pin the mmap (and
+        # the archive file) for the lifetime of the decoded tensors.
+        units, gaps = np.array(units), np.array(gaps)
+        opos, oval = np.array(opos), np.array(oval)
+        book = self.codebook(rec.codebook)
+        n_subseq = gaps.shape[0]
+        stream = EncodedStream(
+            units=jnp.asarray(units), gaps=jnp.asarray(gaps),
+            # Ground-truth counts are not stored: the decoder recomputes
+            # them on device in phase 1 (or loads a cached plan).
+            counts=jnp.zeros((n_subseq,), jnp.int32),
+            seq_counts=jnp.zeros((n_subseq // rec.subseqs_per_seq,),
+                                 jnp.int32),
+            total_bits=jnp.asarray(rec.total_bits, jnp.int32),
+            n_symbols=jnp.asarray(rec.n_symbols, jnp.int32),
+            subseqs_per_seq=rec.subseqs_per_seq)
+        return sz.Compressed(
+            stream=stream, codebook=book,
+            outlier_pos=jnp.asarray(opos), outlier_val=jnp.asarray(oval),
+            shape=rec.shape, dtype=np.dtype(rec.dtype), eb=rec.eb,
+            radius=rec.radius, rel_range=rec.rel_range, max_abs=rec.max_abs)
+
+    # -- decoded access -----------------------------------------------------
+
+    def _plan_for(self, rec: F.ChunkRecord, c, method: str, t_high: int,
+                  backend):
+        key = (rec.digest, method, t_high)
+        plan = self.cache.get_plan(key)
+        if plan is None:
+            plan = hp.build_plan(c.stream, c.codebook, method=method,
+                                 backend=backend, t_high=t_high)
+            self.cache.put_plan(key, plan)
+        return plan
+
+    def iter_decode(self, names=None, *, group_chunks: int =
+                    DEFAULT_GROUP_CHUNKS, method: str = "gap",
+                    backend: str = "ref", t_high: int = hp.T_HIGH_DEFAULT,
+                    validate: bool = True, prefetch: bool = True):
+        """Yield ``(name, decoded array)`` with I/O overlapped against decode.
+
+        Chunks stream in groups of ``group_chunks``: each group decodes as
+        one ``decompress_batch`` call while the prefetch thread reads and
+        CRC-validates the next group.  Decoded tensors stay on device, cast
+        to each chunk's recorded ``orig_dtype``.
+        """
+        names = self.names if names is None else list(names)
+        groups = [names[i:i + group_chunks]
+                  for i in range(0, len(names), group_chunks)]
+        if not groups:
+            return
+        be = hp.get_backend(backend)
+
+        def load(group):
+            return [self.read_chunk(n, validate=validate) for n in group]
+
+        pool = (futures.ThreadPoolExecutor(
+            1, thread_name_prefix="szt-prefetch")
+            if prefetch and len(groups) > 1 else None)
+        try:
+            nxt = pool.submit(load, groups[0]) if pool else None
+            for gi, group in enumerate(groups):
+                blobs = nxt.result() if pool else load(group)
+                if pool and gi + 1 < len(groups):
+                    nxt = pool.submit(load, groups[gi + 1])
+                plans = [self._plan_for(self.chunk(n), c, method, t_high, be)
+                         for n, c in zip(group, blobs)]
+                outs = sz.decompress_batch(blobs, method=method, backend=be,
+                                           t_high=t_high, plans=plans)
+                for name, out in zip(group, outs):
+                    yield name, jnp.asarray(
+                        out, jnp.dtype(self.chunk(name).orig_dtype))
+        finally:
+            if pool:
+                pool.shutdown(wait=False, cancel_futures=True)
+
+    def read_all(self, names=None, **kwargs) -> dict:
+        """Decode ``names`` (default: every chunk) into {name: array}."""
+        return dict(self.iter_decode(names, **kwargs))
+
+    def read_tensor(self, name: str, **kwargs):
+        return self.read_all([name], **kwargs)[name]
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self):
+        if getattr(self, "_mm", None) is not None:
+            try:
+                self._mm.close()
+            except BufferError:
+                # A caller still holds a zero-copy view (e.g. a raw _blob);
+                # the map stays alive until the last view dies, which is
+                # safe for an ACCESS_READ mapping.
+                pass
+            self._mm = None
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
+
+
+def open_archive(path: str, **kwargs) -> Archive:
+    return Archive(path, **kwargs)

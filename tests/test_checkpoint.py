@@ -1,12 +1,14 @@
-"""Checkpoint manager: roundtrip, compression, atomicity, resume."""
+"""Checkpoint manager: roundtrip, compression, atomicity, integrity, resume."""
 
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import (ARCHIVE_NAME, CheckpointIntegrityError,
+                                      CheckpointManager)
 from repro.data.pipeline import smooth_field
 
 
@@ -64,6 +66,86 @@ class TestRoundtrip:
         mgr.save(2, small_tree())
         mgr.wait()
         assert mgr.restore()["step"] == 2
+
+    def test_one_archive_per_step(self, tmp_path):
+        """Compressed shards pack into a single store archive, not N files."""
+        mgr = CheckpointManager(str(tmp_path), compress_eb=1e-3,
+                                compress_min_size=1024)
+        mgr.save(0, small_tree())
+        d = os.path.join(str(tmp_path), "step_00000000")
+        files = sorted(os.listdir(d))
+        assert ARCHIVE_NAME in files
+        assert not [f for f in files if f.endswith(".szblob.npz")]
+        from repro.store import Archive
+        with Archive(os.path.join(d, ARCHIVE_NAME)) as ar:
+            assert "params.embed" in ar
+
+
+class TestIntegrity:
+    def _save(self, tmp_path, **kw):
+        mgr = CheckpointManager(str(tmp_path), compress_eb=1e-3,
+                                compress_min_size=1024, **kw)
+        mgr.save(0, small_tree())
+        return mgr, os.path.join(str(tmp_path), "step_00000000")
+
+    def test_corrupt_archive_raises_clear_error(self, tmp_path):
+        mgr, d = self._save(tmp_path)
+        path = os.path.join(d, ARCHIVE_NAME)
+        from repro.store import Archive
+        with Archive(path) as ar:
+            rec = ar.chunk("params.embed")
+        with open(path, "r+b") as f:
+            f.seek(rec.units.offset)
+            flipped = f.read(1)[0] ^ 0xFF
+            f.seek(rec.units.offset)
+            f.write(bytes([flipped]))
+        with pytest.raises(CheckpointIntegrityError):
+            mgr.restore()
+
+    def test_truncated_archive_raises_clear_error(self, tmp_path):
+        mgr, d = self._save(tmp_path)
+        path = os.path.join(d, ARCHIVE_NAME)
+        with open(path, "r+b") as f:
+            f.truncate(os.path.getsize(path) - 64)
+        with pytest.raises(CheckpointIntegrityError):
+            mgr.restore()
+
+    def test_missing_archive_raises_clear_error(self, tmp_path):
+        mgr, d = self._save(tmp_path)
+        os.unlink(os.path.join(d, ARCHIVE_NAME))
+        with pytest.raises(CheckpointIntegrityError, match="missing"):
+            mgr.restore()
+
+    def test_corrupt_raw_shard_raises_clear_error(self, tmp_path):
+        mgr, d = self._save(tmp_path)
+        path = os.path.join(d, "params.layers.b.npy")
+        with open(path, "r+b") as f:
+            f.seek(os.path.getsize(path) - 1)
+            flipped = f.read(1)[0] ^ 0xFF
+            f.seek(os.path.getsize(path) - 1)
+            f.write(bytes([flipped]))
+        with pytest.raises(CheckpointIntegrityError,
+                           match="params.layers.b"):
+            mgr.restore()
+
+    def test_truncated_raw_shard_raises_clear_error(self, tmp_path):
+        """A half-written .npy surfaces as an integrity error, not a numpy
+        parse failure."""
+        mgr, d = self._save(tmp_path)
+        path = os.path.join(d, "params.layers.b.npy")
+        with open(path, "r+b") as f:
+            f.truncate(os.path.getsize(path) // 2)
+        with pytest.raises(CheckpointIntegrityError):
+            mgr.restore()
+
+    def test_restore_uses_plan_cache_on_second_restore(self, tmp_path):
+        from repro.core.huffman import pipeline as hp
+        mgr, _ = self._save(tmp_path)
+        be = hp.get_backend("ref")
+        mgr.restore()
+        be.reset_stats()
+        mgr.restore()
+        assert be.stats["plan_builds"] == 0
 
 
 class TestResume:

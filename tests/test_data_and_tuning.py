@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.huffman import tuning
+from repro.core.huffman import pipeline as hp
 from repro.data.pipeline import DataConfig, SyntheticLM, smooth_field
 
 from conftest import make_book_and_stream
@@ -54,17 +54,17 @@ class TestDataPipeline:
 class TestTuningPlan:
     def test_classify_matches_paper_groups(self):
         ratios = jnp.asarray([0.5, 1.0, 1.5, 3.2, 8.0, 15.9])
-        cls = np.asarray(tuning.classify(ratios, t_high=8))
+        cls = np.asarray(hp.classify(ratios, t_high=8))
         assert list(cls) == [1, 1, 2, 4, 8, 9]
 
     def test_tile_for_class(self):
-        assert tuning.tile_for_class(1) == 1024
-        assert tuning.tile_for_class(4) == 4096
-        assert tuning.tile_for_class(9, t_high=8) == tuning.OVERFLOW_TILE
+        assert hp.tile_for_class(1) == 1024
+        assert hp.tile_for_class(4) == 4096
+        assert hp.tile_for_class(9, t_high=8) == hp.OVERFLOW_TILE
 
     def test_plan_partitions_everything(self, rng):
         book, syms, stream = make_book_and_stream(rng, n_syms=20000)
-        plan = tuning.make_plan(stream, stream.seq_counts,
+        plan = hp.make_plan(stream, stream.seq_counts,
                                 stream.subseqs_per_seq)
         n_seq = stream.n_seq
         assert sorted(plan.seq_order.tolist()) == list(range(n_seq))
@@ -75,7 +75,7 @@ class TestTuningPlan:
 
     def test_ratio_range_maps_into_groups(self, rng):
         book, syms, stream = make_book_and_stream(rng, n_syms=20000)
-        ratios = tuning.sequence_ratios(stream.seq_counts,
+        ratios = hp.sequence_ratios(stream.seq_counts,
                                         stream.subseqs_per_seq)
         r = np.asarray(ratios)
         assert (r > 0).all() and (r <= 16.0 + 1e-6).all()

@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.huffman import codebook as cb
 from repro.core.huffman import decode as hd
 from repro.core.huffman import encode as he
-from repro.core.huffman import tuning
+from repro.core.huffman import pipeline as hp
 
 from conftest import make_book_and_stream
 
@@ -93,7 +93,7 @@ class TestDecoders:
         bnds = jnp.arange(stream.gaps.shape[0], dtype=jnp.int32) * 128
         _, counts = hd.subseq_scan(jnp.asarray(stream.units), ds, dl, starts,
                                    bnds + 128, stream.total_bits, 12)
-        out = tuning.decode_tuned(stream, ds, dl, 12, len(syms), starts,
+        out = hp.execute_tuned(stream, ds, dl, 12, len(syms), starts,
                                   counts)
         assert np.array_equal(np.asarray(out), syms)
 

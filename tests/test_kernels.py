@@ -94,13 +94,13 @@ class TestSelfsyncKernel:
 
     def test_full_pipeline(self, rng):
         book, syms, stream = make_book_and_stream(rng, n_syms=4000)
-        ds, dl = _luts(book)
+        from repro.core.huffman import pipeline as pp
         for method in ("gap", "selfsync"):
-            out = ops.decode_pipeline(stream, ds, dl, book.max_len,
-                                      len(syms), method=method)
+            out = pp.decode(stream, book, len(syms), method=method,
+                            backend="pallas")
             assert np.array_equal(np.asarray(out), syms), method
-        out = ops.decode_pipeline(stream, ds, dl, book.max_len, len(syms),
-                                  method="gap", tuned=True)
+        out = pp.decode(stream, book, len(syms), method="gap",
+                        backend="pallas", strategy="tuned")
         assert np.array_equal(np.asarray(out), syms)
 
 

@@ -12,7 +12,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.huffman import codebook as cb
 from repro.core.huffman import decode as hd
 from repro.core.huffman import encode as he
-from repro.core.huffman import tuning
+from repro.core.huffman import pipeline as hp
 
 
 class TestChunkedEncoderProperty:
@@ -53,7 +53,7 @@ class TestTunerInvariance:
         _, counts = hd.subseq_scan(jnp.asarray(stream.units), ds, dl,
                                    starts, bnds + 128, stream.total_bits,
                                    book.max_len)
-        out = tuning.decode_tuned(stream, ds, dl, book.max_len, len(syms),
+        out = hp.execute_tuned(stream, ds, dl, book.max_len, len(syms),
                                   starts, counts, t_high=t_high)
         assert np.array_equal(np.asarray(out), syms)
 

@@ -1,0 +1,238 @@
+"""Compressed tensor store: format round trip, integrity, cache, paging."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api as sz
+from repro.core.huffman import pipeline as hp
+from repro.data.pipeline import smooth_field
+from repro.store import (
+    Archive,
+    ArchiveWriter,
+    KVPager,
+    PlanCache,
+    StoreCorruptError,
+    StoreError,
+    StoreVersionError,
+    write_archive,
+)
+from repro.store import format as F
+
+
+def _entries(n=4, seed=0):
+    out = []
+    for i in range(n):
+        x = np.asarray(smooth_field((48, 40 + 9 * i), seed=seed + i),
+                       np.float32)
+        out.append((f"t{i}", sz.compress(x, eb=1e-3), "float32"))
+    return out
+
+
+@pytest.fixture()
+def archive_path(tmp_path):
+    path = str(tmp_path / "a.szt")
+    write_archive(path, _entries())
+    return path
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize(
+        "backend",
+        ["ref", pytest.param("pallas", marks=pytest.mark.slow)])
+    def test_bit_exact_vs_decompress(self, archive_path, backend):
+        entries = _entries()
+        with Archive(archive_path, plan_cache=PlanCache()) as ar:
+            out = ar.read_all(backend=backend)
+        for name, c, _ in entries:
+            ref = np.asarray(sz.decompress(c, strategy="tuned"))
+            assert np.asarray(out[name]).tobytes() == ref.tobytes(), name
+
+    def test_prefetch_matches_serial(self, archive_path):
+        with Archive(archive_path, plan_cache=PlanCache()) as ar:
+            a = ar.read_all(group_chunks=1, prefetch=True)
+            b = ar.read_all(group_chunks=1, prefetch=False)
+        for n in a:
+            assert np.asarray(a[n]).tobytes() == np.asarray(b[n]).tobytes()
+
+    def test_orig_dtype_cast_stays_on_device(self, tmp_path):
+        x = np.asarray(smooth_field((64, 32), seed=1), np.float32)
+        path = str(tmp_path / "bf16.szt")
+        write_archive(path, [("w", sz.compress(x, eb=1e-3), "bfloat16")])
+        with Archive(path, plan_cache=PlanCache()) as ar:
+            out = ar.read_tensor("w")
+        assert out.dtype == jnp.bfloat16
+        assert isinstance(out, jax.Array)
+
+    def test_duplicate_names_rejected(self, tmp_path):
+        (name, c, dt), *_ = _entries(1)
+        with pytest.raises(StoreError):
+            with ArchiveWriter(str(tmp_path / "d.szt")) as w:
+                w.add(name, c, dt)
+                w.add(name, c, dt)
+
+
+class TestIntegrity:
+    def test_truncated_file(self, archive_path):
+        size = os.path.getsize(archive_path)
+        with open(archive_path, "r+b") as f:
+            f.truncate(size - 32)
+        with pytest.raises(StoreCorruptError):
+            Archive(archive_path, plan_cache=PlanCache())
+
+    def test_truncated_to_partial_header(self, archive_path):
+        with open(archive_path, "r+b") as f:
+            f.truncate(F.HEADER_SIZE // 2)
+        with pytest.raises(StoreCorruptError):
+            Archive(archive_path, plan_cache=PlanCache())
+
+    def test_version_mismatch(self, archive_path):
+        with open(archive_path, "r+b") as f:
+            f.seek(8)  # version field follows the 8-byte magic
+            f.write((F.FORMAT_VERSION + 1).to_bytes(4, "little"))
+        with pytest.raises(StoreVersionError):
+            Archive(archive_path, plan_cache=PlanCache())
+
+    def test_bad_magic(self, archive_path):
+        with open(archive_path, "r+b") as f:
+            f.write(b"NOTASTOR")
+        with pytest.raises(StoreError):
+            Archive(archive_path, plan_cache=PlanCache())
+
+    def test_corrupt_chunk_payload(self, archive_path):
+        with Archive(archive_path, plan_cache=PlanCache()) as ar:
+            rec = ar.chunk("t2")
+        pos = rec.units.offset + rec.units.length // 2
+        with open(archive_path, "r+b") as f:
+            f.seek(pos)
+            flipped = f.read(1)[0] ^ 0xFF
+            f.seek(pos)
+            f.write(bytes([flipped]))
+        with Archive(archive_path, plan_cache=PlanCache()) as ar:
+            with pytest.raises(StoreCorruptError, match="t2"):
+                ar.read_chunk("t2")
+            # other chunks still read fine
+            ar.read_chunk("t0")
+
+    def test_corrupt_codebook_payload(self, archive_path):
+        with Archive(archive_path, plan_cache=PlanCache()) as ar:
+            cb_rec = ar._cb_by_digest[ar.chunk("t0").codebook]
+        with open(archive_path, "r+b") as f:
+            f.seek(cb_rec.enc_code.offset)
+            f.write(b"\xff\xff\xff\xff")
+        with Archive(archive_path, plan_cache=PlanCache()) as ar:
+            with pytest.raises(StoreCorruptError, match="codebook"):
+                ar.read_chunk("t0")
+
+    def test_no_tmp_left_behind(self, archive_path):
+        d = os.path.dirname(archive_path)
+        assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+
+
+class TestCodebookDedup:
+    def test_identical_histograms_share_one_table(self, tmp_path):
+        x = np.asarray(smooth_field((48, 48), seed=3), np.float32)
+        y = np.asarray(smooth_field((48, 48), seed=4), np.float32)
+        path = str(tmp_path / "dedup.szt")
+        write_archive(path, [
+            ("a", sz.compress(x, eb=1e-3), "float32"),
+            ("b", sz.compress(x, eb=1e-3), "float32"),  # same histogram
+            ("c", sz.compress(y, eb=1e-3), "float32"),  # different
+        ])
+        with Archive(path, plan_cache=PlanCache()) as ar:
+            assert len(ar) == 3
+            assert ar.n_codebooks == 2
+            assert ar.chunk("a").codebook == ar.chunk("b").codebook
+            assert ar.chunk("a").codebook != ar.chunk("c").codebook
+            out = ar.read_all()
+        for name in ("a", "b"):
+            err = np.abs(np.asarray(out[name]) - x).max()
+            assert err <= 1e-3 * (x.max() - x.min()) * 1.01 + 1e-7
+
+
+class TestPlanCache:
+    def test_second_open_rebuilds_zero_plans(self, archive_path):
+        cache = PlanCache()
+        be = hp.get_backend("ref")
+
+        be.reset_stats()
+        with Archive(archive_path, plan_cache=cache) as ar:
+            first = ar.read_all()
+        assert be.stats["plan_builds"] == len(first)
+
+        be.reset_stats()
+        with Archive(archive_path, plan_cache=cache) as ar:
+            second = ar.read_all()
+        assert be.stats["plan_builds"] == 0
+        assert cache.stats["plan_hits"] == len(first)
+        for n in first:
+            assert np.asarray(first[n]).tobytes() == \
+                np.asarray(second[n]).tobytes()
+
+    def test_method_keys_are_distinct(self, archive_path):
+        cache = PlanCache()
+        be = hp.get_backend("ref")
+        with Archive(archive_path, plan_cache=cache) as ar:
+            ar.read_all(method="gap")
+            be.reset_stats()
+            ar.read_all(method="selfsync")
+        assert be.stats["plan_builds"] == 4  # selfsync plans are separate
+
+    def test_lru_bound(self, archive_path):
+        cache = PlanCache(max_plans=2)
+        with Archive(archive_path, plan_cache=cache) as ar:
+            ar.read_all()
+        assert len(cache) == 2
+
+
+class TestPaging:
+    def _cache(self, seed=0, s=32):
+        k = jax.random.PRNGKey(seed)
+        # smooth along the token axis so the blocks actually compress
+        base = jnp.cumsum(jax.random.normal(k, (2, 2, s, 2, 8)) * 0.05,
+                          axis=2)
+        return {"k": base, "v": base + 0.5, "pos": jnp.arange(4)}
+
+    def test_offload_zeroes_and_page_in_restores(self, tmp_path):
+        cache = self._cache()
+        orig = {n: np.asarray(a, np.float32) for n, a in cache.items()}
+        pager = KVPager(str(tmp_path), eb=1e-3, plan_cache=PlanCache())
+        cache, bid = pager.offload(cache, 0, 16)
+        assert np.all(np.asarray(cache["k"])[:, :, :16] == 0)
+        assert np.array_equal(np.asarray(cache["k"])[:, :, 16:],
+                              orig["k"][:, :, 16:])
+        assert np.array_equal(np.asarray(cache["pos"]), orig["pos"])
+        cache = pager.page_in(cache, bid)
+        for n in ("k", "v"):
+            rng = orig[n].max() - orig[n].min()
+            err = np.abs(np.asarray(cache[n], np.float32) - orig[n]).max()
+            assert err <= 1e-3 * rng * 1.01 + 1e-7
+
+    def test_repeat_page_in_hits_plan_cache(self, tmp_path):
+        cache = self._cache(seed=1)
+        pager = KVPager(str(tmp_path), eb=1e-3, plan_cache=PlanCache())
+        cache, bid = pager.offload(cache, 0, 16)
+        cache = pager.page_in(cache, bid)
+        be = hp.get_backend("ref")
+        be.reset_stats()
+        pager.page_in(cache, bid)
+        assert be.stats["plan_builds"] == 0
+        assert pager.stats["pages_in"] == 2
+
+    def test_drop_deletes_archive(self, tmp_path):
+        cache = self._cache(seed=2)
+        pager = KVPager(str(tmp_path), plan_cache=PlanCache())
+        cache, bid = pager.offload(cache, 8, 24)
+        path = pager.block_meta(bid)["path"]
+        assert os.path.exists(path)
+        pager.drop(bid)
+        assert not os.path.exists(path)
+        assert pager.resident_blocks == []
+
+    def test_empty_range_rejected(self, tmp_path):
+        pager = KVPager(str(tmp_path), plan_cache=PlanCache())
+        with pytest.raises(ValueError):
+            pager.offload(self._cache(), 8, 8)
