@@ -8,10 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api
+from repro.core import Codec, CodecConfig
 from repro.core.huffman import decode as hd
 from repro.core.huffman import encode as he
-from repro.core.huffman import pipeline as hp
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
@@ -55,7 +54,8 @@ def decode_baseline_cusz(compressed, chunk_symbols: int = 16384):
     return run, ch["stored_bytes"]
 
 
-# (method, strategy, early_exit) per paper Table V variant.
+# (method, strategy, early_exit) per paper Table V variant -- each variant
+# is nothing but a CodecConfig (plus the self-sync early-exit toggle).
 _VARIANTS = {
     "ori_selfsync": ("selfsync", "padded", False),
     "opt_selfsync": ("selfsync", "tile", True),
@@ -63,6 +63,16 @@ _VARIANTS = {
     "opt_gap": ("gap", "tile", True),
     "tuned_gap": ("gap", "tuned", True),
 }
+
+
+def variant_codec(variant: str, backend: str = "ref") -> Codec:
+    """The ``Codec`` whose config IS the named paper Table V variant."""
+    if variant not in _VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; valid variants: "
+                         f"{sorted(_VARIANTS)}")
+    method, strategy, _ = _VARIANTS[variant]
+    return Codec(CodecConfig(method=method, strategy=strategy,
+                             backend=backend))
 
 
 def make_variant(compressed, variant: str, backend: str = "ref"):
@@ -75,22 +85,18 @@ def make_variant(compressed, variant: str, backend: str = "ref"):
     "tuned_*" = per-CR-class tiles (paper Alg. 2), plan prebuilt (the tuner's
                classify/sort cost is timed separately in tableII).
 
-    Every variant runs through the unified ``pipeline.decode`` entry point;
-    ``backend`` selects "ref" (jnp) or "pallas" (kernels).
+    Every variant is one ``CodecConfig`` (method x strategy x backend)
+    driving ``Codec.decode``; no strategy/backend kwarg plumbing.
     """
-    if variant not in _VARIANTS:
-        raise ValueError(variant)
-    method, strategy, early_exit = _VARIANTS[variant]
+    codec = variant_codec(variant, backend)   # validates the variant name
+    _, strategy, early_exit = _VARIANTS[variant]
     c = compressed
     stream, book, n = c.stream, c.codebook, c.n_symbols
-    plan = None
-    if strategy == "tuned":
-        plan = hp.build_plan(stream, book, method=method, backend=backend)
+    plan = codec.build_plan(stream, book) if strategy == "tuned" else None
 
     def run():
-        return hp.decode(stream, book, n, plan=plan, method=method,
-                         strategy=strategy, backend=backend,
-                         early_exit=early_exit)
+        return codec.decode(stream, book, n, plan=plan,
+                            early_exit=early_exit)
 
     return run
 
@@ -99,5 +105,6 @@ def gbps(nbytes: int, seconds: float) -> float:
     return nbytes / max(seconds, 1e-12) / 1e9
 
 
-def compress_ds(x, eb=1e-3):
-    return api.compress(x, eb=eb, mode="rel")
+def compress_ds(x, eb: "float | None" = None):
+    cfg = CodecConfig() if eb is None else CodecConfig(eb=eb)
+    return Codec(cfg).compress(x)

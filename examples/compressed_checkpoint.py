@@ -30,7 +30,9 @@ def main():
     print(f"trained 10 steps, loss {float(m['loss']):.3f}")
 
     with tempfile.TemporaryDirectory() as d:
-        mgr = CheckpointManager(d, compress_eb=1e-4, compress_min_size=4096)
+        from repro.core import Codec, CodecConfig
+        mgr = CheckpointManager(d, codec=Codec(CodecConfig(eb=1e-4)),
+                                compress_min_size=4096)
         mgr.save(9, params, opt)
         import os
         import subprocess

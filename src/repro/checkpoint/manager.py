@@ -5,6 +5,9 @@ Writes are atomic (tmp dir + rename) so a preempted save can never corrupt
 the restore path -- the fault-tolerance tests kill a training process mid-run
 and restart from ``latest_step``.
 
+Compression policy lives in one ``repro.core.Codec`` handed to the
+manager: its eb/mode quantize the float shards, its method/backend decode
+them back, and its digest-keyed plan cache persists across restores.
 Compressible float shards are packed into ONE ``repro.store`` archive per
 step (chunked format, deduped codebooks, per-chunk CRC32) instead of N
 loose files; restore streams the archive through the double-buffered
@@ -27,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api as sz
+from repro.core.codec import Codec, default_codec
+from repro.core.sz.compressor import Compressed
 from repro.store import Archive, ArchiveWriter, StoreError
 
 ARCHIVE_NAME = "archive.szt"
@@ -90,16 +94,28 @@ class _CrcTee:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, compress_eb: float | None = None,
-                 compress_min_size: int = 65536, asynchronous: bool = False,
-                 decode_backend: str = "ref"):
+    """Checkpoints over the store, with one ``Codec`` as the whole policy.
+
+    ``codec=None`` saves raw shards only.  With a codec, float32 shards of
+    at least ``compress_min_size`` elements compress under the codec's
+    eb/mode into the step archive, and restores decode with the codec's
+    method/backend -- re-restores hit its plan cache (phase 4 only).
+    """
+
+    def __init__(self, directory: str, codec: "Codec | None" = None,
+                 compress_min_size: int = 65536, asynchronous: bool = False):
         self.dir = directory
-        self.eb = compress_eb
+        self.codec = codec
         self.min_size = compress_min_size
-        self.decode_backend = decode_backend
         os.makedirs(directory, exist_ok=True)
         self._pool = futures.ThreadPoolExecutor(1) if asynchronous else None
         self._pending = None
+
+    @property
+    def _read_codec(self) -> Codec:
+        """Codec for the restore path: a raw-only manager can still read a
+        compressed checkpoint through the default codec."""
+        return self.codec if self.codec is not None else default_codec()
 
     # -- write --------------------------------------------------------------
 
@@ -126,27 +142,30 @@ class CheckpointManager:
         writer = None
         try:
             for tname, tree in trees.items():
-                for key, leaf in _flatten(tree).items():
-                    arr = np.asarray(leaf)
+                flat = {key: np.asarray(leaf)
+                        for key, leaf in _flatten(tree).items()}
+                if self.codec is not None:
+                    # Tree-level compression: every float32 shard above the
+                    # size floor becomes a Compressed leaf in one codec call.
+                    flat = self.codec.compress_tree(flat,
+                                                    min_size=self.min_size)
+                for key, leaf in flat.items():
                     fname = f"{tname}.{key}"
-                    compressible = (self.eb is not None
-                                    and arr.dtype in (np.float32,)
-                                    and arr.size >= self.min_size)
-                    if compressible:
+                    if isinstance(leaf, Compressed):
                         if writer is None:
                             writer = ArchiveWriter(
-                                os.path.join(tmp, ARCHIVE_NAME))
-                        writer.add(fname,
-                                   sz.compress(arr, eb=self.eb, mode="rel"),
-                                   orig_dtype=str(arr.dtype))
+                                os.path.join(tmp, ARCHIVE_NAME),
+                                codec=self.codec)
+                        writer.add(fname, leaf,
+                                   orig_dtype=str(np.dtype(leaf.dtype)))
                         manifest["entries"][fname] = {"kind": "sz"}
                     else:
                         path = os.path.join(tmp, fname + ".npy")
                         with open(path, "wb") as f:
                             tee = _CrcTee(f)
-                            np.save(tee, arr, allow_pickle=False)
+                            np.save(tee, leaf, allow_pickle=False)
                         manifest["entries"][fname] = {
-                            "kind": "raw", "dtype": str(arr.dtype),
+                            "kind": "raw", "dtype": str(leaf.dtype),
                             "checksum": tee.crc}
         except BaseException:
             if writer is not None:
@@ -186,7 +205,7 @@ class CheckpointManager:
                 f"step {step}: manifest lists {len(sz_entries)} compressed "
                 f"entries but {ARCHIVE_NAME} is missing")
         try:
-            with Archive(apath) as ar:
+            with Archive(apath, codec=self._read_codec) as ar:
                 for fname, meta in sz_entries.items():
                     if fname not in ar:
                         raise CheckpointIntegrityError(
@@ -197,8 +216,7 @@ class CheckpointManager:
                         raise CheckpointIntegrityError(
                             f"step {step}: entry {fname!r} checksum in "
                             f"manifest.json disagrees with {ARCHIVE_NAME}")
-                return ar.read_all(list(sz_entries),
-                                   backend=self.decode_backend)
+                return ar.read_all(list(sz_entries))
         except StoreError as e:
             raise CheckpointIntegrityError(
                 f"step {step}: {ARCHIVE_NAME} is corrupt or truncated: "

@@ -1,3 +1,6 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+
+from repro.core.cache import DEFAULT_PLAN_CACHE, PlanCache  # noqa: F401
+from repro.core.codec import Codec, CodecConfig, default_codec  # noqa: F401

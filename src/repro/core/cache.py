@@ -1,0 +1,163 @@
+"""Plan / LUT cache and the content digests that key it.
+
+Promoted out of ``repro.store`` so plan reuse is a property of the *codec*,
+not of the archive reader: every consumer that decodes through a
+``repro.core.Codec`` (checkpoint restore, KV paging, direct library calls)
+shares one digest-keyed cache.
+
+Two maps, both keyed by content digests:
+
+* **codebooks** -- codebook digest -> materialized ``Codebook`` (decode LUT
+  included).  Archives store only the tiny encoder tables; the
+  ``2**max_len``-entry decode LUT is derived on first use and shared by
+  every chunk (and every archive) with the same histogram.
+* **plans** -- (chunk digest, method, t_high) -> ``DecoderPlan``.  A chunk
+  digest names the *decode problem* (payload bytes + framing + codebook),
+  so a cached plan is valid for any tensor with that content -- whether it
+  arrived from an archive chunk or an in-memory ``Compressed``.  Plans are
+  backend-portable (asserted by the pipeline tests), so the key
+  deliberately omits the backend.
+
+The cache is bounded (LRU on plans) because KV paging can stream an
+unbounded number of distinct blocks through one process.
+"""
+
+from __future__ import annotations
+
+import collections
+import hashlib
+import struct
+import threading
+import zlib
+
+import numpy as np
+
+
+def crc32_arrays(*arrays) -> int:
+    crc = 0
+    for a in arrays:
+        crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), crc)
+    return crc & 0xFFFFFFFF
+
+
+def codebook_digest(enc_code, enc_len, max_len: int) -> str:
+    """Content digest of a codebook (the dedup + LUT-cache key).
+
+    The encoder tables fully determine the canonical decode LUT, so hashing
+    (enc_code, enc_len, max_len) is sufficient.
+    """
+    h = hashlib.sha1()
+    h.update(np.asarray(enc_code, np.uint32).tobytes())
+    h.update(np.asarray(enc_len, np.uint8).tobytes())
+    h.update(struct.pack("<I", max_len))
+    return h.hexdigest()
+
+
+def chunk_digest(payload_crc: int, total_bits: int, n_symbols: int,
+                 subseqs_per_seq: int, codebook_digest_: str) -> str:
+    """Stable identity of a chunk's *decode problem* (the plan-cache key).
+
+    Two chunks with the same payload bytes, framing, and codebook decode
+    through identical phase 1-3 plans, so the cache key hashes exactly that.
+    """
+    h = hashlib.sha1()
+    h.update(struct.pack("<IqqI", payload_crc & 0xFFFFFFFF, total_bits,
+                         n_symbols, subseqs_per_seq))
+    h.update(codebook_digest_.encode())
+    return h.hexdigest()
+
+
+def compressed_digest(c) -> str:
+    """Digest of an in-memory ``Compressed`` -- identical to the digest the
+    archive writer records for the same payload, so plans cached by a store
+    read are hits for a direct ``Codec.decompress`` and vice versa.
+
+    Memoized on the object (and its codebook): the CRC pass over the
+    payload runs once per tensor, not once per decode.
+    """
+    d = getattr(c, "_digest", None)
+    if d is not None:
+        return d
+    book = c.codebook
+    cbd = getattr(book, "_digest", None)
+    if cbd is None:
+        cbd = codebook_digest(book.enc_code, book.enc_len, int(book.max_len))
+        try:
+            # Codebook is a frozen dataclass; the digest memo is not part of
+            # its value, so bypass the frozen guard.
+            object.__setattr__(book, "_digest", cbd)
+        except AttributeError:
+            pass
+    crc = crc32_arrays(np.asarray(c.stream.units, np.uint32),
+                       np.asarray(c.stream.gaps, np.uint8),
+                       np.asarray(c.outlier_pos, np.int32),
+                       np.asarray(c.outlier_val, np.int32))
+    d = chunk_digest(crc, int(c.stream.total_bits), int(c.stream.n_symbols),
+                     int(c.stream.subseqs_per_seq), cbd)
+    try:
+        c._digest = d
+    except AttributeError:
+        pass
+    return d
+
+
+class PlanCache:
+    def __init__(self, max_plans: int = 4096):
+        self.max_plans = max_plans
+        self._books: dict = {}
+        self._plans: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = {"plan_hits": 0, "plan_misses": 0,
+                      "lut_hits": 0, "lut_misses": 0}
+
+    # -- codebooks / LUTs ---------------------------------------------------
+
+    def get_codebook(self, digest: str, build_fn):
+        """Return the cached ``Codebook`` for ``digest``, building via
+        ``build_fn()`` on first use."""
+        with self._lock:
+            book = self._books.get(digest)
+            if book is not None:
+                self.stats["lut_hits"] += 1
+                return book
+            self.stats["lut_misses"] += 1
+        book = build_fn()
+        with self._lock:
+            return self._books.setdefault(digest, book)
+
+    # -- plans --------------------------------------------------------------
+
+    def get_plan(self, key):
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._plans.move_to_end(key)
+                self.stats["plan_hits"] += 1
+            else:
+                self.stats["plan_misses"] += 1
+            return plan
+
+    def put_plan(self, key, plan):
+        with self._lock:
+            self._plans[key] = plan
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.max_plans:
+                self._plans.popitem(last=False)
+
+    def clear(self):
+        with self._lock:
+            self._books.clear()
+            self._plans.clear()
+
+    def reset_stats(self):
+        with self._lock:
+            for k in self.stats:
+                self.stats[k] = 0
+
+    def __len__(self):
+        return len(self._plans)
+
+
+#: Process-wide default used by the default ``Codec`` (and therefore by
+#: ``Archive`` / ``KVPager`` unless given their own codec or cache).
+DEFAULT_PLAN_CACHE = PlanCache()

@@ -47,6 +47,11 @@ OVERFLOW_TILE = 3584        # paper: optimal buffer for CR > T_high on V100
 SYMBOL_BYTES = 2
 DEFAULT_TILE_SYMS = 4096
 
+#: Decode-write strategies accepted by ``decode`` (and ``CodecConfig``).
+VALID_STRATEGIES = ("tuned", "tile", "padded")
+#: Sync-discovery methods accepted by ``build_plan`` / ``decode_batch``.
+VALID_PLAN_METHODS = ("gap", "selfsync")
+
 
 def ss_max_for_tile(tile_syms: int, max_len: int) -> int:
     """Static bound on subsequences overlapping one ``tile_syms`` output tile.
@@ -332,7 +337,8 @@ def build_plan(stream: EncodedStream, codebook, method: str = "gap",
                                     stream.total_bits, n_subseq, sps,
                                     luts.max_len, early_exit=early_exit)
     else:
-        raise ValueError(f"unknown method {method!r}")
+        raise ValueError(f"unknown method {method!r}; valid methods: "
+                         f"{list(VALID_PLAN_METHODS)}")
 
     counts = jnp.asarray(counts)
     offsets = hd.output_offsets(counts)
@@ -537,7 +543,8 @@ def decode(stream: EncodedStream, codebook, n_out: int, *,
         return _class_dispatch(be.decode_tiles, units, luts.dec_sym,
                                luts.dec_len, luts.max_len, stream.total_bits,
                                [meta], plan.t_high)[0]
-    raise ValueError(f"unknown strategy {strategy!r}")
+    raise ValueError(f"unknown strategy {strategy!r}; valid strategies: "
+                     f"{list(VALID_STRATEGIES)}")
 
 
 def execute_tuned(stream: EncodedStream, dec_sym, dec_len, max_len: int,

@@ -9,7 +9,6 @@ or Pallas kernels.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -139,46 +138,27 @@ def _dequantize(c: Compressed, codes: jnp.ndarray) -> jnp.ndarray:
         radius=c.radius, dtype=jnp.dtype(str(c.dtype)))
 
 
-def _resolve_decode_args(use_tiles, use_kernels, backend, strategy, tuned):
-    """Map the deprecated flag triple onto (backend, strategy)."""
-    if use_kernels is not None:
-        warnings.warn("decompress(use_kernels=...) is deprecated; pass "
-                      "backend='pallas' or backend='ref'",
-                      DeprecationWarning, stacklevel=3)
-        backend = backend or ("pallas" if use_kernels else "ref")
-    if use_tiles is not None:
-        warnings.warn("decompress(use_tiles=...) is deprecated; pass "
-                      "strategy='tile' or strategy='padded'",
-                      DeprecationWarning, stacklevel=3)
-        strategy = strategy or ("tile" if use_tiles else "padded")
-    if tuned:
-        strategy = strategy or "tuned"
-    return backend or "ref", strategy or "tile"
-
-
 def decompress(
     c: Compressed,
     method: str = "gap",
     tile_syms: int = hp.DEFAULT_TILE_SYMS,
-    use_tiles: "bool | None" = None,
-    use_kernels: "bool | None" = None,
     *,
-    backend: "str | None" = None,
-    strategy: "str | None" = None,
-    tuned: bool = False,
+    backend: "str | hp.DecodeBackend" = "ref",
+    strategy: str = "tile",
+    t_high: int = hp.T_HIGH_DEFAULT,
     plan=None,
 ) -> jnp.ndarray:
     """Decompress; ``method`` in {"gap", "selfsync", "naive_ref"}.
 
-    Decoding goes through the unified ``core.huffman.pipeline.decode`` entry
-    point: ``backend`` in {"ref", "pallas"} selects the jnp reference or the
+    This is the raw engine function: every knob is a per-call argument.
+    Application code should normally hold a configured ``repro.core.Codec``
+    (which adds plan caching and a fixed policy) instead of calling this
+    directly.  Decoding goes through ``core.huffman.pipeline.decode``:
+    ``backend`` in ``available_backends()`` selects the jnp reference or the
     Pallas kernels (interpret mode on CPU), ``strategy`` in {"tuned", "tile",
-    "padded"} selects the decode-write variant (``tuned=True`` is shorthand
-    for ``strategy="tuned"``), and ``plan`` may carry a prebuilt
-    ``DecoderPlan``.  ``use_tiles`` / ``use_kernels`` are deprecated aliases.
+    "padded"} selects the decode-write variant, and ``plan`` may carry a
+    prebuilt ``DecoderPlan``.
     """
-    backend, strategy = _resolve_decode_args(use_tiles, use_kernels, backend,
-                                             strategy, tuned)
     book = c.codebook
     n = c.n_symbols
 
@@ -190,7 +170,7 @@ def decompress(
     else:
         codes = hp.decode(c.stream, book, n, plan=plan, method=method,
                           backend=backend, strategy=strategy,
-                          tile_syms=tile_syms)
+                          tile_syms=tile_syms, t_high=t_high)
     return _dequantize(c, codes)
 
 

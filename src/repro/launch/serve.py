@@ -44,7 +44,12 @@ def main(argv=None):
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--kv-len", type=int, default=None)
     ap.add_argument("--compress-kv", action="store_true")
-    ap.add_argument("--kv-eb", type=float, default=1e-3)
+    ap.add_argument("--kv-eb", type=float, default=None,
+                    help="relative error bound for KV compression "
+                         "(default: the CodecConfig default)")
+    ap.add_argument("--kv-backend", default=None,
+                    help="decode backend for KV restore ('ref', 'pallas'; "
+                         "default: the CodecConfig default)")
     ap.add_argument("--kv-offload", action="store_true",
                     help="page prompt KV blocks out to store archives and "
                          "demand-page them back before generation")
@@ -60,6 +65,15 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     kv_len = args.kv_len or (args.prompt_len + args.gen_len)
+
+    # One configured codec drives every KV compression path of this run
+    # (offload paging AND in-memory compress/restore): eb, bound mode,
+    # decode method/backend, and the plan cache travel together.
+    from repro.core import Codec, CodecConfig
+    overrides = {k: v for k, v in (("eb", args.kv_eb),
+                                   ("backend", args.kv_backend))
+                 if v is not None}
+    kv_codec = Codec(CodecConfig(**overrides))
 
     key = jax.random.PRNGKey(args.seed)
     params = T.init_model(key, cfg)
@@ -110,7 +124,7 @@ def main(argv=None):
                 if k in ("k", "v", "latent", "k_scale", "v_scale")]
         offload_dir = args.kv_offload_dir or tempfile.mkdtemp(
             prefix="kv_blocks_")
-        pager = KVPager(offload_dir, eb=args.kv_eb)
+        pager = KVPager(offload_dir, codec=kv_codec)
         snapshot = {k: np.asarray(cache[k], np.float32) for k in keys}
         t0 = time.time()
         cache, block_ids = offload_prefix(cache, pager, args.prompt_len,
@@ -139,8 +153,8 @@ def main(argv=None):
     if args.compress_kv:
         skip = tuple(k for k in cache if k in ("xk", "xv"))
         cc = kvcache.compress_cache(
-            {k: v for k, v in cache.items()}, eb=args.kv_eb, skip=skip)
-        restored = kvcache.decompress_cache(cc)
+            {k: v for k, v in cache.items()}, codec=kv_codec, skip=skip)
+        restored = kvcache.decompress_cache(cc, codec=kv_codec)
         for name, arr in restored.items():
             kv_err = max(kv_err, float(np.max(np.abs(
                 np.asarray(arr, np.float32)

@@ -58,8 +58,11 @@ def main(argv=None):
         vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
         seed=args.seed))
 
-    mgr = (CheckpointManager(args.ckpt_dir,
-                             compress_eb=args.ckpt_compress_eb)
+    ckpt_codec = None
+    if args.ckpt_compress_eb is not None:
+        from repro.core import Codec, CodecConfig
+        ckpt_codec = Codec(CodecConfig(eb=args.ckpt_compress_eb))
+    mgr = (CheckpointManager(args.ckpt_dir, codec=ckpt_codec)
            if args.ckpt_dir else None)
 
     start_step = 0

@@ -19,7 +19,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api as sz
+from repro.core.codec import Codec, default_codec
 from repro.store.paging import KVPager  # noqa: F401  (re-export)
 
 
@@ -42,38 +42,39 @@ class CompressedCache:
         return self.original_bytes / max(self.compressed_bytes, 1)
 
 
-def compress_cache(cache: dict, eb: float = 1e-3,
+def compress_cache(cache: dict, codec: "Codec | None" = None,
                    skip: tuple = ()) -> CompressedCache:
-    """Compress every tensor of a decode cache (relative error bound).
+    """Compress every tensor of a decode cache through one ``Codec``.
 
     The cache layout (L, B, S, H, D) is flattened with S innermost-adjacent
     to channels so the Lorenzo predictor sees token-to-token continuity.
+    ``codec`` defaults to ``repro.core.default_codec()`` (the paper's
+    relative 1e-3 bound).
     """
-    blobs, dts, shapes = {}, {}, {}
-    for name, arr in cache.items():
-        if name in skip:
-            continue
-        x = np.asarray(arr, np.float32)
-        blobs[name] = sz.compress(x, eb=eb, mode="rel")
-        dts[name] = str(arr.dtype)
-        shapes[name] = arr.shape
-    return CompressedCache(blobs, dts, shapes)
+    codec = codec if codec is not None else default_codec()
+    picked = {n: np.asarray(a, np.float32) for n, a in cache.items()
+              if n not in skip}
+    blobs = codec.compress_tree(picked)
+    return CompressedCache(
+        blobs,
+        {n: str(cache[n].dtype) for n in picked},
+        {n: cache[n].shape for n in picked})
 
 
-def decompress_cache(cc: CompressedCache, method: str = "gap",
-                     backend: str = "ref") -> dict:
-    """Restore every cache tensor via the class-batched decoder.
+def decompress_cache(cc: CompressedCache,
+                     codec: "Codec | None" = None) -> dict:
+    """Restore every cache tensor via the codec's class-batched decoder.
 
-    All blocks decode in one ``decompress_batch`` call -- one decode-write
-    dispatch per CR class across the whole cache, not per tensor.
+    All blocks decode in one ``decompress_tree`` call -- one decode-write
+    dispatch per CR class across the whole cache, not per tensor -- with
+    phase 1-3 plans served from the codec's cache on repeats.
     """
-    names = list(cc.blobs)
-    xs = sz.decompress_batch([cc.blobs[n] for n in names], method=method,
-                             backend=backend)
+    codec = codec if codec is not None else default_codec()
+    xs = codec.decompress_tree(cc.blobs)
     # Cast on device: decode_batch already produced device arrays, so the
     # dtype cast must not bounce them through host memory.
     return {n: jnp.asarray(x, jnp.dtype(cc.orig_dtypes[n]))
-            for n, x in zip(names, xs)}
+            for n, x in xs.items()}
 
 
 # ---------------------------------------------------------------------------

@@ -1,19 +1,23 @@
-"""Compressed tensor store: chunked ``.szt`` archives + plan cache + paging.
+"""Compressed tensor store: chunked ``.szt`` archives + paging over a Codec.
 
 Public surface:
   * ``ArchiveWriter`` / ``write_archive``  -- build an archive (codebooks
-    deduped by digest, per-chunk CRC32, atomic publish).
+    deduped by digest, per-chunk CRC32, atomic publish); ``add_array``
+    compresses through the writer's codec.
   * ``Archive`` / ``open_archive``         -- mmap reader; ``read_all`` /
-    ``iter_decode`` overlap disk reads with batched device decode.
-  * ``PlanCache`` / ``DEFAULT_PLAN_CACHE`` -- digest-keyed plan + LUT reuse
-    across opens (restore, serving restarts, KV page-ins).
+    ``iter_decode`` overlap disk reads with batched device decode.  Decode
+    policy and the plan cache come from the ``codec=`` the archive was
+    opened with (default: ``repro.core.default_codec()``).
   * ``KVPager``                            -- evict / restore KV-cache token
-    ranges through archives.
+    ranges through archives, one codec for both directions.
   * ``StoreError`` hierarchy               -- ``StoreVersionError`` for
     incompatible archives, ``StoreCorruptError`` for truncation/checksum.
+
+``PlanCache`` / ``DEFAULT_PLAN_CACHE`` now live in ``repro.core.cache``
+(the Codec owns plan reuse); they are re-exported here for compatibility.
 """
 
-from repro.store.cache import DEFAULT_PLAN_CACHE, PlanCache  # noqa: F401
+from repro.core.cache import DEFAULT_PLAN_CACHE, PlanCache  # noqa: F401
 from repro.store.format import (  # noqa: F401
     FORMAT_VERSION,
     StoreCorruptError,

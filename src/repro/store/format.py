@@ -29,12 +29,16 @@ disk and one decode LUT in memory.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import json
 import struct
-import zlib
 
 import numpy as np
+
+from repro.core.cache import (  # noqa: F401  (re-exports: digests moved to
+    chunk_digest,               # core so the Codec's plan-cache keys and the
+    codebook_digest,            # archive's are one namespace)
+    crc32_arrays,
+)
 
 MAGIC = b"SZTSTORE"
 FORMAT_VERSION = 1
@@ -178,40 +182,6 @@ def unpack_index(buf: bytes) -> tuple:
         raise StoreCorruptError(f"archive index is unreadable: {e}") from e
     return ([CodebookRecord.from_json(c) for c in doc["codebooks"]],
             [ChunkRecord.from_json(c) for c in doc["chunks"]])
-
-
-def codebook_digest(enc_code, enc_len, max_len: int) -> str:
-    """Content digest of a codebook (the dedup + LUT-cache key).
-
-    The encoder tables fully determine the canonical decode LUT, so hashing
-    (enc_code, enc_len, max_len) is sufficient.
-    """
-    h = hashlib.sha1()
-    h.update(np.asarray(enc_code, np.uint32).tobytes())
-    h.update(np.asarray(enc_len, np.uint8).tobytes())
-    h.update(struct.pack("<I", max_len))
-    return h.hexdigest()
-
-
-def chunk_digest(payload_crc: int, total_bits: int, n_symbols: int,
-                 subseqs_per_seq: int, codebook_digest_: str) -> str:
-    """Stable identity of a chunk's *decode problem* (the plan-cache key).
-
-    Two chunks with the same payload bytes, framing, and codebook decode
-    through identical phase 1-3 plans, so the cache key hashes exactly that.
-    """
-    h = hashlib.sha1()
-    h.update(struct.pack("<IqqI", payload_crc & 0xFFFFFFFF, total_bits,
-                         n_symbols, subseqs_per_seq))
-    h.update(codebook_digest_.encode())
-    return h.hexdigest()
-
-
-def crc32_arrays(*arrays) -> int:
-    crc = 0
-    for a in arrays:
-        crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), crc)
-    return crc & 0xFFFFFFFF
 
 
 def align_up(off: int, align: int = BLOB_ALIGN) -> int:

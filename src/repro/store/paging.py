@@ -20,8 +20,8 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sz import compressor as sz
-from repro.store.cache import DEFAULT_PLAN_CACHE, PlanCache
+from repro.core.cache import PlanCache
+from repro.core.codec import Codec, default_codec
 from repro.store.reader import Archive
 from repro.store.writer import ArchiveWriter
 
@@ -34,18 +34,21 @@ def _pageable(name: str, arr, seq_axis: int, hi: int) -> bool:
 
 
 class KVPager:
-    """Evict / restore token ranges of a decode cache via store archives."""
+    """Evict / restore token ranges of a decode cache via store archives.
 
-    def __init__(self, directory: str, *, eb: float = 1e-3,
-                 method: str = "gap", backend: str = "ref",
+    One ``Codec`` drives both directions: its eb/mode compresses evicted
+    blocks, its method/backend/t_high decode them back, and its plan cache
+    makes repeat page-ins phase-4 only.
+    """
+
+    def __init__(self, directory: str, *, codec: "Codec | None" = None,
                  seq_axis: int = 2,
                  plan_cache: "PlanCache | None" = None):
         self.dir = directory
-        self.eb = eb
-        self.method = method
-        self.backend = backend
+        self.codec = codec if codec is not None else default_codec()
         self.seq_axis = seq_axis
-        self.cache = DEFAULT_PLAN_CACHE if plan_cache is None else plan_cache
+        self.cache = (self.codec.plan_cache if plan_cache is None
+                      else plan_cache)
         os.makedirs(directory, exist_ok=True)
         self._blocks: dict = {}
         self._next_id = 0
@@ -95,7 +98,7 @@ class KVPager:
                 raw_bytes += block.size * np.dtype(
                     str(arr.dtype) if str(arr.dtype) != "bfloat16"
                     else np.float32).itemsize
-                w.add(k, sz.compress(block, eb=self.eb, mode="rel"),
+                w.add(k, self.codec.compress(block),
                       orig_dtype=str(arr.dtype))
                 cache[k] = arr.at[span].set(0)
         self._blocks[block_id] = {"path": path, "lo": lo, "hi": hi,
@@ -111,9 +114,9 @@ class KVPager:
         """Decode a block's tensors (device arrays), without touching any
         cache.  Plan-cache hits make repeat fetches phase-4 only."""
         meta = self._blocks[block_id]
-        with Archive(meta["path"], plan_cache=self.cache) as ar:
-            out = ar.read_all(meta["names"], method=self.method,
-                              backend=self.backend)
+        with Archive(meta["path"], codec=self.codec,
+                     plan_cache=self.cache) as ar:
+            out = ar.read_all(meta["names"])
         self.stats["pages_in"] += 1
         return out
 

@@ -26,12 +26,13 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache import PlanCache
+from repro.core.codec import Codec, default_codec
 from repro.core.huffman import codebook as cb
 from repro.core.huffman import pipeline as hp
 from repro.core.huffman.encode import EncodedStream
 from repro.core.sz import compressor as sz
 from repro.store import format as F
-from repro.store.cache import DEFAULT_PLAN_CACHE, PlanCache
 
 DEFAULT_GROUP_CHUNKS = 8
 
@@ -47,9 +48,12 @@ def _build_codebook(rec: F.CodebookRecord, enc_code, enc_len) -> cb.Codebook:
 class Archive:
     """One open ``.szt`` archive (use as a context manager)."""
 
-    def __init__(self, path: str, *, plan_cache: "PlanCache | None" = None):
+    def __init__(self, path: str, *, codec: "Codec | None" = None,
+                 plan_cache: "PlanCache | None" = None):
         self.path = path
-        self.cache = DEFAULT_PLAN_CACHE if plan_cache is None else plan_cache
+        self.codec = codec if codec is not None else default_codec()
+        self.cache = (self.codec.plan_cache if plan_cache is None
+                      else plan_cache)
         size = os.path.getsize(path)
         self._f = open(path, "rb")
         try:
@@ -154,11 +158,16 @@ class Archive:
             total_bits=jnp.asarray(rec.total_bits, jnp.int32),
             n_symbols=jnp.asarray(rec.n_symbols, jnp.int32),
             subseqs_per_seq=rec.subseqs_per_seq)
-        return sz.Compressed(
+        c = sz.Compressed(
             stream=stream, codebook=book,
             outlier_pos=jnp.asarray(opos), outlier_val=jnp.asarray(oval),
             shape=rec.shape, dtype=np.dtype(rec.dtype), eb=rec.eb,
             radius=rec.radius, rel_range=rec.rel_range, max_abs=rec.max_abs)
+        # Seed the content digest from the index record so a direct
+        # ``Codec.decompress`` of this tensor shares the archive's
+        # plan-cache entries without re-hashing the payload.
+        c._digest = rec.digest
+        return c
 
     # -- decoded access -----------------------------------------------------
 
@@ -173,22 +182,28 @@ class Archive:
         return plan
 
     def iter_decode(self, names=None, *, group_chunks: int =
-                    DEFAULT_GROUP_CHUNKS, method: str = "gap",
-                    backend: str = "ref", t_high: int = hp.T_HIGH_DEFAULT,
+                    DEFAULT_GROUP_CHUNKS, method: "str | None" = None,
+                    backend: "str | None" = None, t_high: "int | None" = None,
                     validate: bool = True, prefetch: bool = True):
         """Yield ``(name, decoded array)`` with I/O overlapped against decode.
 
         Chunks stream in groups of ``group_chunks``: each group decodes as
         one ``decompress_batch`` call while the prefetch thread reads and
         CRC-validates the next group.  Decoded tensors stay on device, cast
-        to each chunk's recorded ``orig_dtype``.
+        to each chunk's recorded ``orig_dtype``.  Decode policy (sync
+        method, backend, tuner ``t_high``) defaults to the archive's codec;
+        the keyword overrides exist for benchmarking alternates.
         """
+        cfg = self.codec.config
+        method = cfg.method if method is None else method
+        t_high = cfg.t_high if t_high is None else t_high
+        be = (self.codec.backend if backend is None
+              else hp.get_backend(backend))
         names = self.names if names is None else list(names)
         groups = [names[i:i + group_chunks]
                   for i in range(0, len(names), group_chunks)]
         if not groups:
             return
-        be = hp.get_backend(backend)
 
         def load(group):
             return [self.read_chunk(n, validate=validate) for n in group]

@@ -31,10 +31,16 @@ def _overall_cr_class(n_symbols: int, total_bits: int,
 
 
 class ArchiveWriter:
-    """Write one ``.szt`` archive; use as a context manager or call close()."""
+    """Write one ``.szt`` archive; use as a context manager or call close().
 
-    def __init__(self, path: str):
+    ``codec`` (default: ``repro.core.default_codec()``) only matters for
+    ``add_array``, which compresses through it; ``add`` accepts
+    already-compressed tensors from any codec.
+    """
+
+    def __init__(self, path: str, *, codec=None):
         self.path = path
+        self._codec = codec
         self._tmp = path + ".tmp"
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         self._f = open(self._tmp, "wb")
@@ -120,6 +126,13 @@ class ArchiveWriter:
             crc32=crc,
             digest=F.chunk_digest(crc, total_bits, n_symbols, sps, cb_digest),
         ))
+
+    def add_array(self, name: str, arr, orig_dtype: "str | None" = None):
+        """Compress ``arr`` through the writer's codec and append it."""
+        if self._codec is None:
+            from repro.core.codec import default_codec
+            self._codec = default_codec()
+        self.add(name, self._codec.compress(arr), orig_dtype=orig_dtype)
 
     def checksums(self) -> dict:
         """{chunk name: payload CRC32} for everything added so far (e.g. to

@@ -9,7 +9,12 @@ import pytest
 
 from repro.checkpoint.manager import (ARCHIVE_NAME, CheckpointIntegrityError,
                                       CheckpointManager)
+from repro.core import Codec, CodecConfig
 from repro.data.pipeline import smooth_field
+
+
+def _codec(eb=1e-3):
+    return Codec(CodecConfig(eb=eb))
 
 
 def small_tree(seed=0):
@@ -37,7 +42,7 @@ class TestRoundtrip:
 
     def test_compressed_within_bound(self, tmp_path):
         eb = 1e-3
-        mgr = CheckpointManager(str(tmp_path), compress_eb=eb,
+        mgr = CheckpointManager(str(tmp_path), codec=_codec(eb),
                                 compress_min_size=1024)
         params = small_tree()
         mgr.save(0, params)
@@ -69,7 +74,7 @@ class TestRoundtrip:
 
     def test_one_archive_per_step(self, tmp_path):
         """Compressed shards pack into a single store archive, not N files."""
-        mgr = CheckpointManager(str(tmp_path), compress_eb=1e-3,
+        mgr = CheckpointManager(str(tmp_path), codec=_codec(),
                                 compress_min_size=1024)
         mgr.save(0, small_tree())
         d = os.path.join(str(tmp_path), "step_00000000")
@@ -83,7 +88,7 @@ class TestRoundtrip:
 
 class TestIntegrity:
     def _save(self, tmp_path, **kw):
-        mgr = CheckpointManager(str(tmp_path), compress_eb=1e-3,
+        mgr = CheckpointManager(str(tmp_path), codec=_codec(),
                                 compress_min_size=1024, **kw)
         mgr.save(0, small_tree())
         return mgr, os.path.join(str(tmp_path), "step_00000000")

@@ -23,6 +23,12 @@ from repro.store import (
 from repro.store import format as F
 
 
+def _kv_codec(eb=1e-3):
+    """A pager codec with its own plan cache (isolated from the default)."""
+    from repro.core import Codec, CodecConfig
+    return Codec(CodecConfig(eb=eb), plan_cache=PlanCache())
+
+
 def _entries(n=4, seed=0):
     out = []
     for i in range(n):
@@ -199,7 +205,7 @@ class TestPaging:
     def test_offload_zeroes_and_page_in_restores(self, tmp_path):
         cache = self._cache()
         orig = {n: np.asarray(a, np.float32) for n, a in cache.items()}
-        pager = KVPager(str(tmp_path), eb=1e-3, plan_cache=PlanCache())
+        pager = KVPager(str(tmp_path), codec=_kv_codec())
         cache, bid = pager.offload(cache, 0, 16)
         assert np.all(np.asarray(cache["k"])[:, :, :16] == 0)
         assert np.array_equal(np.asarray(cache["k"])[:, :, 16:],
@@ -213,7 +219,7 @@ class TestPaging:
 
     def test_repeat_page_in_hits_plan_cache(self, tmp_path):
         cache = self._cache(seed=1)
-        pager = KVPager(str(tmp_path), eb=1e-3, plan_cache=PlanCache())
+        pager = KVPager(str(tmp_path), codec=_kv_codec())
         cache, bid = pager.offload(cache, 0, 16)
         cache = pager.page_in(cache, bid)
         be = hp.get_backend("ref")
@@ -224,7 +230,7 @@ class TestPaging:
 
     def test_drop_deletes_archive(self, tmp_path):
         cache = self._cache(seed=2)
-        pager = KVPager(str(tmp_path), plan_cache=PlanCache())
+        pager = KVPager(str(tmp_path), codec=_kv_codec())
         cache, bid = pager.offload(cache, 8, 24)
         path = pager.block_meta(bid)["path"]
         assert os.path.exists(path)
@@ -233,6 +239,6 @@ class TestPaging:
         assert pager.resident_blocks == []
 
     def test_empty_range_rejected(self, tmp_path):
-        pager = KVPager(str(tmp_path), plan_cache=PlanCache())
+        pager = KVPager(str(tmp_path), codec=_kv_codec())
         with pytest.raises(ValueError):
             pager.offload(self._cache(), 8, 8)

@@ -45,8 +45,10 @@ class TestServeWithCompressedKV:
         for t in range(8):
             _, cache = serve(params, toks[:, t:t + 1], cache, jnp.int32(t))
 
-        cc = kvcache.compress_cache(cache, eb=1e-3)
-        restored = kvcache.decompress_cache(cc)
+        from repro.core import Codec, CodecConfig
+        codec = Codec(CodecConfig(eb=1e-3))
+        cc = kvcache.compress_cache(cache, codec=codec)
+        restored = kvcache.decompress_cache(cc, codec=codec)
         for k in cache:
             a = np.asarray(cache[k], np.float32)
             b = np.asarray(restored[k], np.float32)
@@ -76,7 +78,9 @@ class TestCompressedCheckpointTrainOn:
         for s in range(3):
             params, opt, _ = step_fn(params, opt, data.batch_at(s))
 
-        mgr = CheckpointManager(str(tmp_path), compress_eb=1e-4,
+        from repro.core import Codec, CodecConfig
+        mgr = CheckpointManager(str(tmp_path),
+                                codec=Codec(CodecConfig(eb=1e-4)),
                                 compress_min_size=4096)
         mgr.save(2, params, opt)
         r = mgr.restore()

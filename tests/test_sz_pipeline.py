@@ -72,12 +72,12 @@ class TestKernelPath:
         b = np.asarray(api.decompress(c, method="gap", backend="pallas"))
         assert np.array_equal(a, b)
 
-    def test_deprecated_flags_alias_new_api(self, rng):
+    def test_removed_flags_raise_pointing_at_codec_config(self, rng):
         x = smooth_field((32, 200), seed=6)
         c = api.compress(x, eb=1e-3)
-        a = np.asarray(api.decompress(c, method="gap", backend="ref",
-                                      strategy="padded"))
-        with pytest.warns(DeprecationWarning):
-            b = np.asarray(api.decompress(c, method="gap", use_tiles=False,
-                                          use_kernels=False))
-        assert np.array_equal(a, b)
+        for bad in ({"use_tiles": False}, {"use_kernels": True},
+                    {"tuned": True}):
+            with pytest.raises(TypeError, match="CodecConfig"):
+                api.decompress(c, **bad)
+        with pytest.raises(TypeError, match="CodecConfig"):
+            api.compress(x, use_kernels=True)
