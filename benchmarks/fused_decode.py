@@ -1,0 +1,67 @@
+"""Fused decode→dequantize→reconstruct vs the two-pass decompression path.
+
+The two-pass path materializes the full uint16 quant-code array in HBM
+between the Huffman decode-write dispatch and the Lorenzo reconstruction
+(one 2 B/symbol write + one 2 B/symbol read of pure intermediate traffic);
+the fused path (``CodecConfig(fused=True)``) carries the decoded symbols
+through dequantization and the inverse-Lorenzo prefix sum inside the
+decode-write dispatch, so that round trip disappears.  This table times
+both paths over Table-V-style compression-ratio variants (CR swept via the
+error bound, as in the paper's Fig. 2 sensitivity study) and reports the
+intermediate-traffic accounting: ``intermediate_bytes`` is the size of the
+decode→reconstruct handoff that each path moves through HBM -- always 0
+for the fused path, ``2 * quant_code_bytes`` for two-pass.
+
+Wall times are CPU timings of the jit'd reference pipelines (the Pallas
+fused kernel runs the same phases; interpret mode is not timeable); the
+HBM-traffic column is the quantity the paper's memory-bound analysis says
+dominates on an accelerator.  Each cell also asserts fused output is
+bit-exact with two-pass before timing.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as Cm
+from benchmarks import datasets as DS
+
+from repro.core import Codec, CodecConfig
+from repro.core.huffman import pipeline as hp
+
+#: CR variants: relative error bounds spanning low-CR to high-CR regimes.
+EBS = (1e-2, 1e-3, 1e-4)
+
+
+def run(n: int = DS.DEFAULT_N, quick: bool = False):
+    rows = []
+    names = list(DS.PAPER_RATIOS)[:2] if quick else list(DS.PAPER_RATIOS)[:4]
+    ebs = EBS[:2] if quick else EBS
+    if quick:
+        n = n // 4
+    for name in names:
+        x, _ = DS.make_dataset(name, n)
+        for eb in ebs:
+            c = Cm.compress_ds(x, eb=eb)
+            qbytes = c.quant_code_bytes
+            two = Codec(CodecConfig(eb=eb, strategy="tile"))
+            fus = Codec(CodecConfig(eb=eb, strategy="tile", fused=True))
+            plan = two.plan_for(c)
+
+            be = hp.get_backend("ref")
+            be.reset_stats()
+            a = two.decompress(c, plan=plan)
+            b = fus.decompress(c, plan=plan)
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), \
+                (name, eb)   # fused must be bit-exact before it is timed
+            assert be.stats["fused_fallbacks"] == 0, (name, eb)
+
+            t2 = Cm.timeit(lambda: two.decompress(c, plan=plan))
+            tf = Cm.timeit(lambda: fus.decompress(c, plan=plan))
+            tag = f"fused/{name}/eb{eb:g}"
+            rows.append((f"{tag}/twopass", t2 * 1e6,
+                         f"CR={c.ratio:.2f};intermediate_bytes={2 * qbytes}"))
+            rows.append((f"{tag}/fused", tf * 1e6,
+                         f"CR={c.ratio:.2f};intermediate_bytes=0;"
+                         f"cpu_speedup={t2 / tf:.2f}"))
+    return rows

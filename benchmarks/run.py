@@ -7,11 +7,19 @@ TPU-target numbers are derived analytically in EXPERIMENTS.md §Roofline from
 the dry-run artifacts (see benchmarks/roofline.py).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only tableV,...]
+                                               [--record BENCH_tag.json]
+                                               [--compare BENCH_old.json]
+
+``--record`` writes the rows to a JSON file so runs can be kept as a
+trajectory (convention: ``BENCH_<tag>.json``, e.g. one per PR);
+``--compare`` reloads such a file and appends a ``vs_baseline`` speedup
+column for every row name present in both runs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -21,14 +29,23 @@ def main() -> None:
                     help="subset of datasets / sizes (CI mode)")
     ap.add_argument("--only", default=None,
                     help="comma list: tableI,tableII,tableIV,tableV,"
-                         "fig2,fig4,batch,store,arch,roofline")
+                         "fig2,fig4,batch,store,fused,arch,roofline")
+    ap.add_argument("--record", default=None, metavar="BENCH_tag.json",
+                    help="write rows to a JSON trajectory file")
+    ap.add_argument("--compare", default=None, metavar="BENCH_old.json",
+                    help="append vs_baseline speedups from a recorded run")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
+    baseline = {}
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = {r[0]: float(r[1]) for r in json.load(f)["rows"]}
+
     from benchmarks import (arch_step, batch_decode, compression_ratio,
                             cr_sensitivity, decode_throughput,
-                            decoder_phases, e2e_decompression, roofline,
-                            shmem_tuning, store_throughput)
+                            decoder_phases, e2e_decompression, fused_decode,
+                            roofline, shmem_tuning, store_throughput)
 
     suites = [
         ("tableV", decode_throughput.run),
@@ -39,23 +56,31 @@ def main() -> None:
         ("fig4", e2e_decompression.run),
         ("batch", batch_decode.run),
         ("store", store_throughput.run),
+        ("fused", fused_decode.run),
         ("arch", arch_step.run),
         ("roofline", roofline.run),
     ]
+    all_rows = []
     print("name,us_per_call,derived")
     for key, fn in suites:
         if only and key not in only:
             continue
         try:
-            if key in ("arch", "roofline"):
-                rows = fn(quick=args.quick)
-            else:
-                rows = fn(quick=args.quick)
+            rows = fn(quick=args.quick)
         except Exception as e:  # keep the harness robust: report and go on
             print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             continue
         for name, us, derived in rows:
+            # Record the un-annotated row: a trajectory file must not bake
+            # in speedups relative to whatever --compare happened to load.
+            all_rows.append([name, us, derived])
+            if name in baseline and us > 0:
+                derived = f"{derived};vs_baseline={baseline[name] / us:.2f}"
             print(f"{name},{us:.1f},{derived}", flush=True)
+
+    if args.record:
+        with open(args.record, "w") as f:
+            json.dump({"argv": sys.argv[1:], "rows": all_rows}, f, indent=1)
 
 
 if __name__ == "__main__":

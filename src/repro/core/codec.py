@@ -72,6 +72,14 @@ class CodecConfig:
                        (fixed tiles, Alg. 1) | "padded" (baseline layout)
       t_high           highest non-overflow CR class of the tuner
       tile_syms        tile size for the fixed-"tile" strategy
+      fused            decode→dequantize→reconstruct in ONE dispatch: phase
+                       4 emits reconstructed floats directly, never writing
+                       the uint16 quant-code array to HBM.  Bit-exact with
+                       the two-pass path.  Requests the fused path; decodes
+                       it cannot serve (N-D tensors, non-float32 dtypes,
+                       the "tuned" strategy, "naive_ref", or a backend
+                       without fused ops) automatically fall back to
+                       two-pass and count ``stats["fused_fallbacks"]``.
 
     Session side:
       plan_cache_size  LRU bound of the Codec's digest-keyed plan cache
@@ -87,6 +95,7 @@ class CodecConfig:
     strategy: str = "tile"
     t_high: int = hp.T_HIGH_DEFAULT
     tile_syms: int = hp.DEFAULT_TILE_SYMS
+    fused: bool = False
     plan_cache_size: int = 4096
 
     def __post_init__(self):
@@ -115,6 +124,8 @@ class CodecConfig:
         if self.subseqs_per_seq < 1:
             raise ValueError("subseqs_per_seq must be >= 1, got "
                              f"{self.subseqs_per_seq}")
+        if not isinstance(self.fused, bool):
+            raise ValueError(f"fused must be a bool, got {self.fused!r}")
         if self.plan_cache_size < 0:
             raise ValueError("plan_cache_size must be >= 0, got "
                              f"{self.plan_cache_size}")
@@ -189,6 +200,14 @@ class Codec:
         return plan
 
     def decompress(self, compressed: Compressed, *, plan=None):
+        """Decompress one tensor under the codec's policy.
+
+        The phase 1-3 plan is fetched from / inserted into the plan cache
+        by content digest; with ``config.fused`` the decode runs the fused
+        decode→dequantize→reconstruct dispatch (falling back to two-pass,
+        counted in ``stats["fused_fallbacks"]``, when it cannot serve the
+        tensor).
+        """
         c = self.config
         if plan is None and c.method != "naive_ref":
             plan = self.plan_for(compressed)
@@ -196,11 +215,13 @@ class Codec:
                                      tile_syms=c.tile_syms,
                                      backend=self.backend,
                                      strategy=c.strategy, t_high=c.t_high,
-                                     plan=plan)
+                                     plan=plan, fused=c.fused)
 
     def decompress_batch(self, cs, *, plans=None) -> list:
         """Decompress many tensors: one decode-write dispatch per CR class
-        across ALL of them, phase 1-3 plans served from the cache."""
+        across ALL of them, phase 1-3 plans served from the cache.  With
+        ``config.fused``, eligible tensors instead decode through the fused
+        per-tensor dispatch (see ``compressor.decompress_batch``)."""
         cs = list(cs)
         if not cs:
             return []
@@ -211,7 +232,8 @@ class Codec:
             plans = [self.plan_for(x) for x in cs]
         return compressor.decompress_batch(cs, method=c.method,
                                            backend=self.backend,
-                                           t_high=c.t_high, plans=plans)
+                                           t_high=c.t_high, plans=plans,
+                                           fused=c.fused)
 
     def decode(self, stream, codebook, n_out: int, *, plan=None,
                early_exit: bool = True):
@@ -333,7 +355,8 @@ def compress(x, eb: "float | None" = None, mode: "str | None" = None,
 def decompress(c: Compressed, method: "str | None" = None,
                tile_syms: "int | None" = None, *,
                backend: "str | None" = None, strategy: "str | None" = None,
-               t_high: "int | None" = None, plan=None, **removed):
+               t_high: "int | None" = None, fused: "bool | None" = None,
+               plan=None, **removed):
     """Decompress one tensor (shim over a default ``Codec``).
 
     The legacy ``use_tiles`` / ``use_kernels`` / ``tuned`` flags are gone;
@@ -342,17 +365,17 @@ def decompress(c: Compressed, method: "str | None" = None,
     _reject_removed("decompress", removed)
     cfg = _replace_some(default_codec().config, method=method,
                         tile_syms=tile_syms, backend=backend,
-                        strategy=strategy, t_high=t_high)
+                        strategy=strategy, t_high=t_high, fused=fused)
     return _codec_for(cfg).decompress(c, plan=plan)
 
 
 def decompress_batch(cs, method: "str | None" = None, *,
                      backend: "str | None" = None,
-                     t_high: "int | None" = None, plans=None,
-                     **removed) -> list:
+                     t_high: "int | None" = None, fused: "bool | None" = None,
+                     plans=None, **removed) -> list:
     """Decompress many tensors with class-batched decode dispatch (shim
     over a default ``Codec``); see ``Codec.decompress_batch``."""
     _reject_removed("decompress_batch", removed)
     cfg = _replace_some(default_codec().config, method=method,
-                        backend=backend, t_high=t_high)
+                        backend=backend, t_high=t_high, fused=fused)
     return _codec_for(cfg).decompress_batch(cs, plans=plans)

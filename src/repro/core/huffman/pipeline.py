@@ -149,6 +149,26 @@ def make_plan(stream, seq_counts, subseqs_per_seq: int,
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class OutputTransform:
+    """Fused decode epilogue: dequantization + inverse Lorenzo, attached to
+    a decode call so phase 4 emits reconstructed floats directly.
+
+    The transform is ``x = 2*eb * cumsum(code - radius)`` with the outlier
+    side list (``outlier_pos`` int32[m_pad] flat positions, -1 padded;
+    ``outlier_val`` the exact residuals) scattered in before the prefix sum
+    -- exactly ``core.sz.lorenzo.dequantize`` for a flat (1-D Lorenzo)
+    tensor.  Backends that register fused phase-4 ops apply it inside the
+    decode-write dispatch, so the uint16 quant-code array is never
+    materialized in HBM between decode and reconstruction.
+    """
+
+    eb: float
+    radius: int
+    outlier_pos: Any
+    outlier_val: Any
+
+
 @dataclasses.dataclass
 class DecodeBackend:
     """One implementation of the decode phases.
@@ -161,6 +181,18 @@ class DecodeBackend:
                   ``decode.decode_write_tiles`` (+ optional ``lut_base``)
     ``padded_fn`` phase-4 padded baseline: (units, ds, dl, start_abs,
                   end_abs, total_bits, max_len, n_out) -> out
+
+    Optional fused phase-4 ops (decode + dequantize + reconstruct in one
+    dispatch; see :class:`OutputTransform`):
+
+    ``fused_tiles_fn``   tiles_fn signature + (opos, oval, eb, radius)
+                         -> reconstructed float32[n_out]
+    ``fused_padded_fn``  padded_fn signature + (opos, oval, eb, radius)
+                         -> reconstructed float32[n_out]
+
+    A backend registered without them still works everywhere; fused
+    requests fall back to the two-pass path and the fallback is recorded
+    in ``stats["fused_fallbacks"]``.
     """
 
     name: str
@@ -168,9 +200,18 @@ class DecodeBackend:
     sync_fn: Callable
     tiles_fn: Callable
     padded_fn: Callable
+    fused_tiles_fn: "Callable | None" = None
+    fused_padded_fn: "Callable | None" = None
     stats: dict = dataclasses.field(
         default_factory=lambda: {"decode_write_dispatches": 0,
-                                 "plan_builds": 0})
+                                 "plan_builds": 0,
+                                 "fused_dispatches": 0,
+                                 "fused_fallbacks": 0})
+
+    @property
+    def supports_fused(self) -> bool:
+        return (self.fused_tiles_fn is not None
+                and self.fused_padded_fn is not None)
 
     def reset_stats(self):
         for k in self.stats:
@@ -185,12 +226,33 @@ class DecodeBackend:
         self.stats["decode_write_dispatches"] += 1
         return self.padded_fn(*args, **kwargs)
 
+    def decode_tiles_fused(self, *args, **kwargs):
+        self.stats["decode_write_dispatches"] += 1
+        self.stats["fused_dispatches"] += 1
+        return self.fused_tiles_fn(*args, **kwargs)
+
+    def decode_padded_fused(self, *args, **kwargs):
+        self.stats["decode_write_dispatches"] += 1
+        self.stats["fused_dispatches"] += 1
+        return self.fused_padded_fn(*args, **kwargs)
+
 
 _BACKEND_FACTORIES: dict[str, Callable[[], DecodeBackend]] = {}
 _BACKENDS: dict[str, DecodeBackend] = {}
 
 
 def register_backend(name: str, factory: Callable[[], DecodeBackend]):
+    """Register (or replace) a decode backend under ``name``.
+
+    ``factory`` is a zero-argument callable returning a ``DecodeBackend``;
+    it runs lazily on the first ``get_backend(name)`` so expensive imports
+    (e.g. the Pallas kernels) are deferred until the backend is requested.
+    Re-registering a name drops the previously constructed handle, so the
+    next ``get_backend`` call sees the new factory.  Backends may omit the
+    fused phase-4 ops (``fused_tiles_fn`` / ``fused_padded_fn``); fused
+    requests then fall back to two-pass decoding, counted in
+    ``stats["fused_fallbacks"]``.
+    """
     _BACKEND_FACTORIES[name] = factory
     _BACKENDS.pop(name, None)
 
@@ -234,8 +296,36 @@ def _make_ref_backend() -> DecodeBackend:
                                  total_bits, max_len, n_out)
         return out
 
+    def _epilogue(codes, n_out, opos, oval, eb, radius):
+        # Lazy import: core.sz -> compressor -> pipeline at package import
+        # time, so pipeline cannot import core.sz at its own top level.
+        from repro.core.sz import lorenzo
+
+        return lorenzo.dequantize(codes, jnp.asarray(opos, jnp.int32),
+                                  jnp.asarray(oval, jnp.int32), eb, (n_out,),
+                                  radius=radius)
+
+    # The ref backend composes the existing jnp paths (decode, then the
+    # exact dequantize/reconstruct the two-pass path uses), so fused-vs-
+    # two-pass parity is testable on every platform by construction.
+    def fused_tiles(units, ds, dl, starts, ends, offsets, total_bits,
+                    max_len, n_out, tile_syms, ss_max, opos, oval, eb,
+                    radius, **kwargs):
+        codes = hd.decode_write_tiles(jnp.asarray(units), ds, dl, starts,
+                                      ends, offsets, total_bits, max_len,
+                                      n_out, tile_syms, ss_max, **kwargs)
+        return _epilogue(codes, n_out, opos, oval, eb, radius)
+
+    def fused_padded(units, ds, dl, start_abs, end_abs, total_bits, max_len,
+                     n_out, opos, oval, eb, radius):
+        codes = padded(units, ds, dl, start_abs, end_abs, total_bits,
+                       max_len, n_out)
+        return _epilogue(codes, n_out, opos, oval, eb, radius)
+
     return DecodeBackend(name="ref", count_fn=count, sync_fn=sync,
-                         tiles_fn=hd.decode_write_tiles, padded_fn=padded)
+                         tiles_fn=hd.decode_write_tiles, padded_fn=padded,
+                         fused_tiles_fn=fused_tiles,
+                         fused_padded_fn=fused_padded)
 
 
 def _make_pallas_backend(interpret: bool = True) -> DecodeBackend:
@@ -267,10 +357,15 @@ def _make_pallas_backend(interpret: bool = True) -> DecodeBackend:
         return out
 
     name = "pallas" if interpret else "pallas-compiled"
-    return DecodeBackend(name=name, count_fn=count, sync_fn=sync,
-                         tiles_fn=functools.partial(ops.decode_write_tiles,
-                                                    interpret=interpret),
-                         padded_fn=padded)
+    return DecodeBackend(
+        name=name, count_fn=count, sync_fn=sync,
+        tiles_fn=functools.partial(ops.decode_write_tiles,
+                                   interpret=interpret),
+        padded_fn=padded,
+        fused_tiles_fn=functools.partial(ops.decode_write_tiles_fused,
+                                         interpret=interpret),
+        fused_padded_fn=functools.partial(ops.decode_padded_fused,
+                                          interpret=interpret))
 
 
 register_backend("ref", _make_ref_backend)
@@ -318,7 +413,24 @@ def build_plan(stream: EncodedStream, codebook, method: str = "gap",
                backend: "str | DecodeBackend" = "ref",
                t_high: int = T_HIGH_DEFAULT,
                early_exit: bool = True) -> DecoderPlan:
-    """Run phases 1-3 on ``backend`` and classify sequences by CR."""
+    """Run decode phases 1-3 on ``backend`` and classify sequences by CR.
+
+    Phase 1-2 discovers the per-subsequence sync points -- from the stored
+    gap array (``method="gap"``) or by self-synchronization
+    (``method="selfsync"``, with ``early_exit`` controlling the paper's
+    ``__all_sync`` round termination) -- and counts the codewords per
+    128-bit window; phase 3 prefix-sums the counts into output offsets.
+    The per-sequence symbol counts then feed the online tuner (paper
+    Alg. 2): sequences are classified by compression ratio into classes
+    ``1..t_high+1`` and sorted into the per-class dispatch lists of
+    ``ClassPlan``.
+
+    The returned ``DecoderPlan`` is backend-portable (device arrays plus
+    host metadata, no backend handles) and content-addressable: the
+    ``Codec`` / store layers cache plans keyed by payload digest, and
+    every build is counted in ``backend.stats["plan_builds"]`` so tests
+    and benchmarks can assert cache hits.
+    """
     be = get_backend(backend)
     be.stats["plan_builds"] += 1
     luts = _as_luts(codebook)
@@ -514,12 +626,44 @@ def decode(stream: EncodedStream, codebook, n_out: int, *,
            method: str = "gap", strategy: str = "tile",
            tile_syms: int = DEFAULT_TILE_SYMS,
            t_high: int = T_HIGH_DEFAULT,
-           early_exit: bool = True) -> jnp.ndarray:
+           early_exit: bool = True,
+           transform: "OutputTransform | None" = None) -> jnp.ndarray:
     """Decode one stream: the single entry point for every decoder variant.
 
-    ``strategy``: "tuned" (per-CR-class tiles), "tile" (fixed ``tile_syms``),
-    or "padded" (baseline layout).  ``plan`` may be prebuilt (and may come
-    from a different backend); otherwise it is built here with ``method``.
+    Args:
+      stream:    the ``EncodedStream`` to decode.
+      codebook:  anything with ``dec_sym`` / ``dec_len`` / ``max_len``
+                 decode tables (normally a ``Codebook``).
+      n_out:     number of symbols to emit.
+      plan:      a prebuilt ``DecoderPlan`` (phases 1-3).  Plans are
+                 backend-portable -- one built on "ref" executes exactly on
+                 "pallas" and vice versa.  ``None`` builds one here with
+                 ``method``.
+      backend:   a registered backend name (``available_backends()``) or a
+                 ``DecodeBackend`` handle.
+      method:    sync discovery when building the plan: "gap" (gap array)
+                 or "selfsync" (see ``VALID_PLAN_METHODS``).
+      strategy:  decode-write variant: "tuned" (per-CR-class tiles, paper
+                 Alg. 2), "tile" (fixed ``tile_syms`` tiles, Alg. 1), or
+                 "padded" (the original decoders' baseline layout).
+      tile_syms: tile size for the fixed-"tile" strategy.
+      t_high:    highest non-overflow CR class when building the plan.
+      early_exit: the self-sync ``__all_sync`` early-exit toggle.
+      transform: optional ``OutputTransform``.  When attached, phase 4 runs
+                 the backend's FUSED ops: the decoded symbols are carried
+                 through dequantization and the inverse-Lorenzo prefix sum
+                 inside the decode-write dispatch and the return value is
+                 the reconstructed float32 array (the uint16 quant-code
+                 array is never materialized).  Supported for the "tile"
+                 and "padded" strategies on backends registered with fused
+                 ops; the "tuned" strategy gathers sequences by CR class,
+                 which reorders the output and breaks the sequential
+                 reconstruction carry, so it raises ``ValueError`` (callers
+                 such as ``sz.compressor.decompress`` fall back to the
+                 two-pass path and count ``stats["fused_fallbacks"]``).
+
+    Returns uint16[n_out] quant codes, or float32[n_out] when ``transform``
+    is attached.
     """
     be = get_backend(backend)
     luts = _as_luts(codebook)
@@ -527,6 +671,30 @@ def decode(stream: EncodedStream, codebook, n_out: int, *,
         plan = build_plan(stream, codebook, method=method, backend=be,
                           t_high=t_high, early_exit=early_exit)
     units = jnp.asarray(stream.units)
+
+    if transform is not None and strategy in ("tile", "padded"):
+        if not be.supports_fused:
+            raise ValueError(
+                f"backend {be.name!r} registers no fused ops; check "
+                f"backend.supports_fused before attaching a transform")
+        t = transform
+        if strategy == "padded":
+            return be.decode_padded_fused(
+                units, luts.dec_sym, luts.dec_len, plan.start_bits,
+                plan.end_bits, stream.total_bits, luts.max_len, n_out,
+                t.outlier_pos, t.outlier_val, t.eb, t.radius)
+        ss_max = ss_max_for_tile(tile_syms, luts.max_len)
+        return be.decode_tiles_fused(
+            units, luts.dec_sym, luts.dec_len, plan.start_bits,
+            plan.end_bits, plan.offsets, stream.total_bits, luts.max_len,
+            n_out, tile_syms, ss_max, t.outlier_pos, t.outlier_val, t.eb,
+            t.radius)
+    if transform is not None and strategy in VALID_STRATEGIES:
+        raise ValueError(
+            f"fused decode (transform=) supports strategies 'tile' and "
+            f"'padded', not {strategy!r}: the tuned per-CR-class gather "
+            f"reorders the output, which breaks the sequential Lorenzo "
+            f"reconstruction carry")
 
     if strategy == "padded":
         return be.decode_padded(units, luts.dec_sym, luts.dec_len,
@@ -628,7 +796,12 @@ def decode_batch(streams, codebooks, n_outs, *,
     number of sub-batches, not with the tensor count).
 
     Returns a list of uint16 symbol arrays, bit-exact with per-tensor
-    ``decode()``.
+    ``decode()``.  This entry point always emits quant codes; the fused
+    decode→dequantize→reconstruct path is per-tensor by construction (its
+    reconstruction carry follows one tensor's output order), so
+    ``sz.compressor.decompress_batch(fused=True)`` routes eligible tensors
+    through per-tensor fused decodes and only the remainder through this
+    class-merged path.
     """
     items = list(zip(streams, codebooks, n_outs))
     if not items:

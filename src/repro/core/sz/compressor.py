@@ -138,6 +138,37 @@ def _dequantize(c: Compressed, codes: jnp.ndarray) -> jnp.ndarray:
         radius=c.radius, dtype=jnp.dtype(str(c.dtype)))
 
 
+def _fused_transform(c: Compressed) -> hp.OutputTransform:
+    return hp.OutputTransform(eb=c.eb, radius=c.radius,
+                              outlier_pos=c.outlier_pos,
+                              outlier_val=c.outlier_val)
+
+
+def fused_unsupported_reason(c: Compressed, backend, method: str,
+                             strategy: str) -> "str | None":
+    """Why the fused decode path cannot serve this tensor (None = it can).
+
+    The fused epilogue is the flat 1-D inverse Lorenzo, so it covers
+    tensors with at most one non-unit axis; N-D tensors, non-float32
+    dtypes, the sequential oracle method, the class-gathering "tuned"
+    strategy, and backends registered without fused ops all fall back to
+    the two-pass path (recorded in ``stats["fused_fallbacks"]``).
+    """
+    be = hp.get_backend(backend)
+    if method == "naive_ref":
+        return "method 'naive_ref' is the sequential oracle"
+    if strategy not in ("tile", "padded"):
+        return ("strategy 'tuned' gathers sequences by CR class, which "
+                "breaks the sequential reconstruction carry")
+    if not be.supports_fused:
+        return f"backend {be.name!r} registers no fused ops"
+    if np.dtype(c.dtype) != np.float32:
+        return f"dtype {np.dtype(c.dtype)} is not float32"
+    if sum(1 for s in c.shape if s != 1) > 1:
+        return "N-D Lorenzo reconstruction (fused epilogue is 1-D)"
+    return None
+
+
 def decompress(
     c: Compressed,
     method: str = "gap",
@@ -147,6 +178,7 @@ def decompress(
     strategy: str = "tile",
     t_high: int = hp.T_HIGH_DEFAULT,
     plan=None,
+    fused: bool = False,
 ) -> jnp.ndarray:
     """Decompress; ``method`` in {"gap", "selfsync", "naive_ref"}.
 
@@ -158,9 +190,27 @@ def decompress(
     Pallas kernels (interpret mode on CPU), ``strategy`` in {"tuned", "tile",
     "padded"} selects the decode-write variant, and ``plan`` may carry a
     prebuilt ``DecoderPlan``.
+
+    ``fused=True`` requests the fused decode→dequantize→reconstruct path:
+    phase 4 carries the decoded symbols straight through dequantization and
+    the inverse-Lorenzo prefix sum inside the decode-write dispatch, never
+    materializing the uint16 quant-code array.  Output is bit-exact with
+    the two-pass path.  When the request cannot be served (see
+    :func:`fused_unsupported_reason`) it silently falls back to two-pass
+    decoding and increments ``backend.stats["fused_fallbacks"]``.
     """
     book = c.codebook
     n = c.n_symbols
+
+    if fused:
+        reason = fused_unsupported_reason(c, backend, method, strategy)
+        if reason is None:
+            out = hp.decode(c.stream, book, n, plan=plan, method=method,
+                            backend=backend, strategy=strategy,
+                            tile_syms=tile_syms, t_high=t_high,
+                            transform=_fused_transform(c))
+            return out.reshape(c.shape)
+        hp.get_backend(backend).stats["fused_fallbacks"] += 1
 
     if method == "naive_ref":
         codes = hd.decode_sequential(jnp.asarray(c.stream.units),
@@ -181,6 +231,7 @@ def decompress_batch(
     backend: str = "ref",
     t_high: int = hp.T_HIGH_DEFAULT,
     plans: "list | None" = None,
+    fused: bool = False,
 ) -> list:
     """Decompress many tensors with class-batched decode dispatch.
 
@@ -192,9 +243,39 @@ def decompress_batch(
     (e.g. cached) ``DecoderPlan`` objects, one per tensor, in which case the
     phase 1-3 rebuild is skipped entirely (the store's plan cache rides on
     this).
+
+    ``fused=True`` trades dispatch merging for intermediate traffic:
+    tensors the fused path can serve (see :func:`fused_unsupported_reason`)
+    decode one-by-one through the fused tile kernel (zero quant-code HBM
+    round trip, but one dispatch chain per tensor); the rest decode through
+    the class-merged two-pass path, each recorded in
+    ``stats["fused_fallbacks"]``.  Output order and bit patterns are
+    unchanged either way.
     """
     if not cs:
         return []
+    if fused:
+        outs: list = [None] * len(cs)
+        rest = []
+        be = hp.get_backend(backend)
+        for i, c in enumerate(cs):
+            if fused_unsupported_reason(c, be, method, "tile") is None:
+                outs[i] = decompress(
+                    c, method=method, backend=be, strategy="tile",
+                    t_high=t_high, plan=plans[i] if plans else None,
+                    fused=True)
+            else:
+                be.stats["fused_fallbacks"] += 1
+                rest.append(i)
+        if rest:
+            codes = hp.decode_batch(
+                [cs[i].stream for i in rest], [cs[i].codebook for i in rest],
+                [cs[i].n_symbols for i in rest], method=method, backend=be,
+                t_high=t_high,
+                plans=[plans[i] for i in rest] if plans else None)
+            for i, q in zip(rest, codes):
+                outs[i] = _dequantize(cs[i], q)
+        return outs
     codes = hp.decode_batch([c.stream for c in cs], [c.codebook for c in cs],
                             [c.n_symbols for c in cs], method=method,
                             backend=backend, t_high=t_high, plans=plans)

@@ -1,6 +1,7 @@
 # Pallas TPU kernels for the paper's compute hot spots:
 #   huffman_decode.py    -- phase-1 count + tile-staged decode-write (Alg. 1)
 #   huffman_selfsync.py  -- sync-point discovery with early exit (__all_sync)
+#   fused_decode.py      -- decode-write + dequant + inverse-Lorenzo epilogue
 #   histogram.py         -- Gomez-Luna-style histogram (codebook + tuner)
 #   lorenzo.py           -- dual-quant Lorenzo fwd/inv (cuSZ (de)compression)
 # ops.py = jit'd wrappers; ref.py = pure-jnp oracles (single source of truth).

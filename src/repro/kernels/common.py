@@ -109,6 +109,26 @@ def decode_window_fixed(rows, start, end, dec_sym, dec_len, max_len: int):
         0, MAX_SYMS, body, (pos0, jnp.zeros(lanes, jnp.int32)))
 
 
+def stage_tile(rows, start, end, off, lut_base, dec_sym, dec_len,
+               max_len: int, tile_syms: int) -> jnp.ndarray:
+    """Decode the lanes overlapping one output tile into a dense staging tile.
+
+    Shared body of ``decode_tiles_kernel_body`` and its fused variant: each
+    lane decodes its window and scatters its symbols to tile-local positions
+    (``off`` is the lane's output offset minus the tile base; out-of-tile
+    positions are dropped).  Returns the uint16[tile_syms] staging tile.
+    """
+    _, counts, padded = decode_window(rows, start, end, dec_sym, dec_len,
+                                      max_len, collect=True,
+                                      lut_base=lut_base)
+    k = jnp.arange(MAX_SYMS, dtype=jnp.int32)[None, :]
+    local = off[:, None] + k
+    valid = (k < counts[:, None]) & (local >= 0) & (local < tile_syms)
+    tile = jnp.zeros((tile_syms,), jnp.uint16)
+    return tile.at[jnp.where(valid, local, tile_syms)].set(
+        jnp.where(valid, padded, 0), mode="drop")
+
+
 def gather_subseq_rows(units: jnp.ndarray, subseq_ids: jnp.ndarray):
     """Build per-subsequence unit rows: row[s] = units[4*s : 4*s + ROW_UNITS].
 

@@ -1,0 +1,170 @@
+"""Pallas TPU kernels for the fused decode→dequantize→reconstruct path.
+
+The two-pass decompression pipeline materializes the full uint16
+quantization-code array in HBM between the Huffman decode-write kernel and
+the Lorenzo reconstruction kernel.  The paper's core lesson (§IV) is that
+the decoder is memory-bound, so that round trip is pure overhead: these
+kernels carry the decoded symbols straight through dequantization
+(``d = code - radius`` with the outlier side list scattered in) and the
+inverse-Lorenzo prefix sum (``x = 2·eb · cumsum(d)``) inside the same
+dispatch, emitting float32 output tiles and never writing the code array
+back to HBM.
+
+Two kernels:
+
+  * ``decode_tiles_fused`` -- ``huffman_decode.decode_tiles_kernel_body``
+    plus the dequantize/reconstruct epilogue.  The grid runs over output
+    tiles; TPU grids execute sequentially, so the Lorenzo carry (the
+    running prefix sum at each tile boundary) lives in a VMEM scratch
+    exactly as in ``lorenzo._recon_kernel``.
+
+  * ``dequant_reconstruct`` -- the epilogue alone (``lorenzo._recon_kernel``
+    extended with dequantization and the outlier scatter), chained after
+    the padded baseline decoder so every decode-write strategy has a fused
+    form.
+
+Bit-exactness: the carry-chained per-tile ``cumsum`` is int32 integer
+arithmetic, identical to the monolithic ``jnp.cumsum`` of
+``core.sz.lorenzo.dequantize``; the single float operation
+(``q_f32 * two_eb``) is the same op in both paths, so fused output is
+bit-identical to two-pass output.  Validated in interpret mode (this
+container is CPU-only); BlockSpecs are written for real VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common as C
+
+
+def _dequant_recon_block(tile_u16, base, opos, oval, carry, two_eb, *,
+                         radius: int, block: int):
+    """Shared epilogue: one ``block``-symbol tile of codes -> float32.
+
+    ``base`` is the tile's global output offset; ``opos``/``oval`` are the
+    full (-1-padded) outlier side list, scattered only where a position
+    lands inside this tile; ``carry`` is the VMEM running-prefix scratch.
+    Returns the float32 tile and updates ``carry`` in place.
+    """
+    d = tile_u16.astype(jnp.int32) - radius
+    loc = opos - base
+    hit = (opos >= 0) & (loc >= 0) & (loc < block)
+    d = d.at[jnp.where(hit, loc, block)].set(
+        jnp.where(hit, oval, 0), mode="drop")
+    q = jnp.cumsum(d) + carry[0]
+    carry[0] = q[-1]
+    return q.astype(jnp.float32) * two_eb
+
+
+def decode_tiles_fused_kernel_body(rows_ref, start_ref, end_ref, off_ref,
+                                   lut_ref, sym_ref, len_ref, opos_ref,
+                                   oval_ref, teb_ref, out_ref, carry, *,
+                                   max_len, tile_syms, radius):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        carry[0] = jnp.int32(0)
+
+    tile = C.stage_tile(rows_ref[0], start_ref[0], end_ref[0], off_ref[0],
+                        lut_ref[0], sym_ref[...], len_ref[...], max_len,
+                        tile_syms)
+    base = pl.program_id(0) * tile_syms
+    out_ref[0] = _dequant_recon_block(tile, base, opos_ref[...],
+                                      oval_ref[...], carry, teb_ref[0],
+                                      radius=radius, block=tile_syms)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_len", "tile_syms", "ss_max", "n_out", "radius",
+                     "interpret"))
+def decode_tiles_fused(rows, start_local, end_local, off_local, lut_base,
+                       dec_sym, dec_len, opos, oval, two_eb, max_len: int,
+                       tile_syms: int, ss_max: int, n_out: int, radius: int,
+                       interpret: bool = True):
+    """Tile-centric decode+write with the fused dequant/reconstruct epilogue.
+
+    First seven inputs are exactly ``huffman_decode.decode_tiles``; the
+    epilogue inputs are ``opos``/``oval`` (the -1-padded outlier side list,
+    int32[m_pad]) and ``two_eb`` (float32[1], the reconstruction scale).
+    Output positions past ``n_out`` in the final tile decode as zero codes
+    and would corrupt the carry, but no tile follows, so the sliced result
+    is exact.  Returns float32[n_out].
+    """
+    n_tiles = rows.shape[0]
+    lut = dec_sym.shape[0]
+    m = opos.shape[0]
+    kernel = functools.partial(decode_tiles_fused_kernel_body,
+                               max_len=max_len, tile_syms=tile_syms,
+                               radius=radius)
+    tiles = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, ss_max, C.ROW_UNITS), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((lut,), lambda t: (0,)),
+            pl.BlockSpec((lut,), lambda t: (0,)),
+            pl.BlockSpec((m,), lambda t: (0,)),
+            pl.BlockSpec((m,), lambda t: (0,)),
+            pl.BlockSpec((1,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_syms), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, tile_syms), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(rows, start_local, end_local, off_local, lut_base, dec_sym, dec_len,
+      opos, oval, two_eb)
+    return tiles.reshape(-1)[:n_out]
+
+
+def dequant_recon_kernel_body(codes_ref, opos_ref, oval_ref, teb_ref,
+                              out_ref, carry, *, radius, block):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        carry[0] = jnp.int32(0)
+
+    base = pl.program_id(0) * block
+    out_ref[...] = _dequant_recon_block(codes_ref[...], base, opos_ref[...],
+                                        oval_ref[...], carry, teb_ref[0],
+                                        radius=radius, block=block)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("radius", "block", "interpret"))
+def dequant_reconstruct(codes, opos, oval, two_eb, radius: int,
+                        block: int = 4096, interpret: bool = True):
+    """Standalone fused epilogue: uint16 codes -> reconstructed float32.
+
+    ``lorenzo.reconstruct1d`` extended with dequantization (``- radius``)
+    and the outlier scatter; chained after the padded baseline decoder.
+    ``codes`` must be padded to a ``block`` multiple (pad codes decode past
+    the real output and only pollute the final block's tail).
+    """
+    n = codes.shape[0]
+    assert n % block == 0, (n, block)
+    m = opos.shape[0]
+    kernel = functools.partial(dequant_recon_kernel_body, radius=radius,
+                               block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(codes, opos, oval, two_eb)

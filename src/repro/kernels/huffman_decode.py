@@ -88,25 +88,15 @@ def count_subseq(rows, start_local, end_local, dec_sym, dec_len,
 def decode_tiles_kernel_body(rows_ref, start_ref, end_ref, off_ref, lut_ref,
                              sym_ref, len_ref, out_ref, *, max_len,
                              tile_syms):
-    rows = rows_ref[0]            # (ss_max, ROW_UNITS)
-    start = start_ref[0]          # (ss_max,) row-local start bits
-    end = end_ref[0]              # (ss_max,)
-    off = off_ref[0]              # (ss_max,) tile-local output offsets
-    lut_base = lut_ref[0]         # (ss_max,) per-lane LUT base offsets
-    dec_sym = sym_ref[...]
-    dec_len = len_ref[...]
-
-    _, counts, padded = C.decode_window(rows, start, end, dec_sym, dec_len,
-                                        max_len, collect=True,
-                                        lut_base=lut_base)
-    # VMEM staging: scatter each lane's symbols to its tile-local positions.
-    k = jnp.arange(C.MAX_SYMS, dtype=jnp.int32)[None, :]
-    local = off[:, None] + k
-    valid = (k < counts[:, None]) & (local >= 0) & (local < tile_syms)
-    tile = jnp.zeros((tile_syms,), jnp.uint16)
-    tile = tile.at[jnp.where(valid, local, tile_syms)].set(
-        jnp.where(valid, padded, 0), mode="drop")
-    out_ref[0] = tile
+    # VMEM staging: each lane decodes its window and scatters its symbols to
+    # tile-local positions (C.stage_tile); one dense aligned tile comes out.
+    out_ref[0] = C.stage_tile(
+        rows_ref[0],              # (ss_max, ROW_UNITS)
+        start_ref[0],             # (ss_max,) row-local start bits
+        end_ref[0],               # (ss_max,)
+        off_ref[0],               # (ss_max,) tile-local output offsets
+        lut_ref[0],               # (ss_max,) per-lane LUT base offsets
+        sym_ref[...], len_ref[...], max_len, tile_syms)
 
 
 @functools.partial(

@@ -15,6 +15,7 @@ import numpy as np
 from repro.core.huffman import decode as hd
 from repro.core.huffman.bits import SUBSEQ_BITS
 from repro.kernels import common as C
+from repro.kernels import fused_decode as _fus
 from repro.kernels import histogram as _hist
 from repro.kernels import huffman_decode as _dec
 from repro.kernels import huffman_selfsync as _sync
@@ -55,14 +56,13 @@ def subseq_counts(units, dec_sym, dec_len, start_abs, end_abs, total_bits,
     return counts[:n], landing[:n]
 
 
-def decode_write_tiles(units, dec_sym, dec_len, start_bits, end_bits, offsets,
-                       total_bits, max_len: int, n_out: int, tile_syms: int,
-                       ss_max: int, lut_base=None, interpret: bool = True):
-    """Kernel-backed phase 4; signature-compatible with the jnp reference
-    ``core.huffman.decode.decode_write_tiles`` (so the tuner can inject it).
+def _tile_inputs(units, start_bits, end_bits, offsets, total_bits,
+                 n_out: int, tile_syms: int, ss_max: int, lut_base=None):
+    """Per-tile lane metadata shared by the plain and fused tile decoders.
 
-    ``lut_base`` (optional int32[n_subseq]) selects a per-subsequence decode
-    table inside a merged LUT (the batched multi-tensor path).
+    Maps each output tile to the (statically bounded) range of subsequences
+    overlapping it and converts their absolute bit windows to row-local
+    coordinates.  Returns (rows, start_local, end_local, off_local, lut_tile).
     """
     units = jnp.asarray(units)
     n_subseq = start_bits.shape[0]
@@ -82,17 +82,88 @@ def decode_write_tiles(units, dec_sym, dec_len, start_bits, end_bits, offsets,
     start_local = jnp.where(valid, start_local, 0)
     end_local = jnp.where(valid, end_local, 0)
     off_local = jnp.where(valid, offsets[subs] - tile_base[:, None],
-                          tile_syms)
+                          tile_syms).astype(jnp.int32)
     if lut_base is None:
         lut_tile = jnp.zeros(subs.shape, jnp.int32)
     else:
         lut_tile = jnp.where(valid, lut_base[subs], 0).astype(jnp.int32)
 
     rows = C.gather_subseq_rows(units, ids)
-    return _dec.decode_tiles(rows, start_local, end_local,
-                             off_local.astype(jnp.int32), lut_tile, dec_sym,
-                             dec_len, max_len, tile_syms, ss_max, n_out,
-                             interpret=interpret)
+    return rows, start_local, end_local, off_local, lut_tile
+
+
+def decode_write_tiles(units, dec_sym, dec_len, start_bits, end_bits, offsets,
+                       total_bits, max_len: int, n_out: int, tile_syms: int,
+                       ss_max: int, lut_base=None, interpret: bool = True):
+    """Kernel-backed phase 4; signature-compatible with the jnp reference
+    ``core.huffman.decode.decode_write_tiles`` (so the tuner can inject it).
+
+    ``lut_base`` (optional int32[n_subseq]) selects a per-subsequence decode
+    table inside a merged LUT (the batched multi-tensor path).
+    """
+    rows, start_local, end_local, off_local, lut_tile = _tile_inputs(
+        units, start_bits, end_bits, offsets, total_bits, n_out, tile_syms,
+        ss_max, lut_base)
+    return _dec.decode_tiles(rows, start_local, end_local, off_local,
+                             lut_tile, dec_sym, dec_len, max_len, tile_syms,
+                             ss_max, n_out, interpret=interpret)
+
+
+def _two_eb_f32(eb):
+    """The reconstruction scale as a float32[1] kernel input.
+
+    Doubling commutes with float32 rounding (power-of-two scaling), so this
+    is bit-identical to the ``2 * eb`` inside ``lorenzo.dequantize``.
+    """
+    return jnp.asarray(eb, jnp.float32).reshape(1) * 2
+
+
+def decode_write_tiles_fused(units, dec_sym, dec_len, start_bits, end_bits,
+                             offsets, total_bits, max_len: int, n_out: int,
+                             tile_syms: int, ss_max: int, opos, oval, eb,
+                             radius: int, lut_base=None,
+                             interpret: bool = True):
+    """Fused phase 4: tile decode + dequantize + inverse-Lorenzo epilogue.
+
+    Same tile mapping as :func:`decode_write_tiles`; the kernel carries the
+    decoded symbols through ``2*eb*(cumsum(code - radius))`` (outlier side
+    list ``opos``/``oval`` scattered in) without materializing the quant-code
+    array.  Returns reconstructed float32[n_out].
+    """
+    rows, start_local, end_local, off_local, lut_tile = _tile_inputs(
+        units, start_bits, end_bits, offsets, total_bits, n_out, tile_syms,
+        ss_max, lut_base)
+    return _fus.decode_tiles_fused(rows, start_local, end_local, off_local,
+                                   lut_tile, dec_sym, dec_len,
+                                   jnp.asarray(opos, jnp.int32),
+                                   jnp.asarray(oval, jnp.int32),
+                                   _two_eb_f32(eb), max_len, tile_syms,
+                                   ss_max, n_out, radius,
+                                   interpret=interpret)
+
+
+def decode_padded_fused(units, dec_sym, dec_len, start_abs, end_abs,
+                        total_bits, max_len: int, n_out: int, opos, oval, eb,
+                        radius: int, interpret: bool = True):
+    """Fused baseline phase 4: padded decode + the standalone epilogue kernel.
+
+    The padded layout + compaction keeps the original decoders' scattered-
+    write cost structure (that is the point of the baseline); the epilogue
+    (``fused_decode.dequant_reconstruct``) then fuses dequantization and
+    reconstruction into one chained-scan kernel instead of two jnp passes.
+    """
+    codes, _ = decode_padded_compact(units, dec_sym, dec_len, start_abs,
+                                     end_abs, total_bits, max_len, n_out,
+                                     interpret=interpret)
+    block = 4096
+    pad = (-n_out) % block
+    if pad:
+        codes = jnp.concatenate([codes, jnp.zeros(pad, jnp.uint16)])
+    out = _fus.dequant_reconstruct(codes, jnp.asarray(opos, jnp.int32),
+                                   jnp.asarray(oval, jnp.int32),
+                                   _two_eb_f32(eb), radius,
+                                   interpret=interpret)
+    return out[:n_out]
 
 
 def decode_padded_compact(units, dec_sym, dec_len, start_abs, end_abs,

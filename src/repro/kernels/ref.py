@@ -3,6 +3,13 @@
 These delegate to the reference implementations in ``repro.core`` so each
 kernel has exactly one source of truth; tests sweep shapes / dtypes /
 codebook skews and assert bit-exact agreement with ``repro.kernels.ops``.
+
+The fused decode ops (``ops.decode_write_tiles_fused`` /
+``ops.decode_padded_fused``) have no mirror here: their oracle is the
+decode + ``core.sz.lorenzo.dequantize`` composition that the "ref" decode
+backend registers (``core.huffman.pipeline._make_ref_backend``), asserted
+bit-exact against the kernels by the fused parity matrices in
+``tests/test_pipeline.py`` and ``tests/test_codec.py``.
 """
 
 from __future__ import annotations

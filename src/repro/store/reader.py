@@ -184,19 +184,22 @@ class Archive:
     def iter_decode(self, names=None, *, group_chunks: int =
                     DEFAULT_GROUP_CHUNKS, method: "str | None" = None,
                     backend: "str | None" = None, t_high: "int | None" = None,
-                    validate: bool = True, prefetch: bool = True):
+                    fused: "bool | None" = None, validate: bool = True,
+                    prefetch: bool = True):
         """Yield ``(name, decoded array)`` with I/O overlapped against decode.
 
         Chunks stream in groups of ``group_chunks``: each group decodes as
         one ``decompress_batch`` call while the prefetch thread reads and
         CRC-validates the next group.  Decoded tensors stay on device, cast
         to each chunk's recorded ``orig_dtype``.  Decode policy (sync
-        method, backend, tuner ``t_high``) defaults to the archive's codec;
-        the keyword overrides exist for benchmarking alternates.
+        method, backend, tuner ``t_high``, the ``fused``
+        decode→dequantize→reconstruct dispatch) defaults to the archive's
+        codec; the keyword overrides exist for benchmarking alternates.
         """
         cfg = self.codec.config
         method = cfg.method if method is None else method
         t_high = cfg.t_high if t_high is None else t_high
+        fused = cfg.fused if fused is None else fused
         be = (self.codec.backend if backend is None
               else hp.get_backend(backend))
         names = self.names if names is None else list(names)
@@ -220,7 +223,8 @@ class Archive:
                 plans = [self._plan_for(self.chunk(n), c, method, t_high, be)
                          for n, c in zip(group, blobs)]
                 outs = sz.decompress_batch(blobs, method=method, backend=be,
-                                           t_high=t_high, plans=plans)
+                                           t_high=t_high, plans=plans,
+                                           fused=fused)
                 for name, out in zip(group, outs):
                     yield name, jnp.asarray(
                         out, jnp.dtype(self.chunk(name).orig_dtype))

@@ -137,6 +137,123 @@ class TestTreeRoundTrip:
             codec.config.t_high + 1
 
 
+def _fused_case(mode: str, eb: float, seed: int = 21):
+    """One compressed 1-D tensor per (mode, eb) cell, with forced outliers
+    so the fused outlier scatter is exercised end to end.  radius=128 keeps
+    the quantization span wider than the outlier band even for range-
+    relative bounds (a rel-eb of 1e-3 caps residuals at ~1/(2 eb) = 500, so
+    the default radius 512 can never overflow)."""
+    x = np.asarray(smooth_field((6000,), seed=seed)).copy()
+    x[[37, 2999, 5511]] += np.float32(40.0) * (x.max() - x.min() + 1.0)
+    c = Codec(CodecConfig(eb=eb, mode=mode, radius=128)).compress(x)
+    assert int((np.asarray(c.outlier_pos) >= 0).sum()) > 0
+    return x, c
+
+
+class TestFusedCodec:
+    """``CodecConfig(fused=True)``: bit-exact with the two-pass path over
+    the policy matrix, silent recorded fallback everywhere else."""
+
+    @pytest.mark.parametrize("method", ["gap", "selfsync"])
+    @pytest.mark.parametrize(
+        "backend",
+        ["ref", pytest.param("pallas", marks=pytest.mark.slow)])
+    @pytest.mark.parametrize("strategy", ["tile", "padded"])
+    @pytest.mark.parametrize("mode,eb", [("rel", 1e-3), ("abs", 2e-3)])
+    def test_bit_exact_with_two_pass(self, method, backend, strategy, mode,
+                                     eb):
+        x, c = _fused_case(mode, eb)
+        cfg = CodecConfig(eb=eb, mode=mode, method=method, backend=backend,
+                          strategy=strategy)
+        two, fus = Codec(cfg), Codec(cfg.replace(fused=True))
+        two.backend.reset_stats()
+        got = np.asarray(fus.decompress(c))
+        assert fus.stats["fused_fallbacks"] == 0
+        assert fus.stats["fused_dispatches"] >= 1
+        want = np.asarray(two.decompress(c))
+        assert got.tobytes() == want.tobytes()
+        assert np.abs(got - x).max() <= c.eb_effective
+
+    def test_tuned_strategy_falls_back(self):
+        x, c = _fused_case("rel", 1e-3)
+        codec = Codec(CodecConfig(strategy="tuned", fused=True))
+        codec.backend.reset_stats()
+        got = np.asarray(codec.decompress(c))
+        assert codec.stats["fused_fallbacks"] == 1
+        assert codec.stats["fused_dispatches"] == 0
+        want = np.asarray(Codec(CodecConfig(strategy="tuned")).decompress(c))
+        assert got.tobytes() == want.tobytes()
+
+    def test_nd_tensor_falls_back(self):
+        codec = Codec(CodecConfig(fused=True))
+        c = codec.compress(smooth_field((40, 30), seed=23))
+        codec.backend.reset_stats()
+        got = np.asarray(codec.decompress(c))
+        assert codec.stats["fused_fallbacks"] == 1
+        want = np.asarray(Codec(CodecConfig()).decompress(c))
+        assert got.tobytes() == want.tobytes()
+
+    def test_backend_without_fused_ops_falls_back(self):
+        """Acceptance: a backend registered without fused ops serves
+        fused=True decodes via two-pass, counting every fallback, with
+        bit-exact results."""
+        ref = hp.get_backend("ref")
+        hp.register_backend("nofused-test", lambda: hp.DecodeBackend(
+            name="nofused-test", count_fn=ref.count_fn, sync_fn=ref.sync_fn,
+            tiles_fn=ref.tiles_fn, padded_fn=ref.padded_fn))
+        try:
+            x, c = _fused_case("rel", 1e-3)
+            codec = Codec(CodecConfig(backend="nofused-test", fused=True))
+            assert not codec.backend.supports_fused
+            codec.backend.reset_stats()
+            got = np.asarray(codec.decompress(c))
+            assert codec.stats["fused_fallbacks"] == 1
+            want = np.asarray(Codec(CodecConfig()).decompress(c))
+            assert got.tobytes() == want.tobytes()
+        finally:
+            hp._BACKEND_FACTORIES.pop("nofused-test", None)
+            hp._BACKENDS.pop("nofused-test", None)
+
+    def test_batch_mixed_eligibility(self):
+        """A fused batch decodes eligible (1-D) tensors through the fused
+        dispatch and the rest through the class-merged two-pass path, in
+        order, bit-exact, one recorded fallback per ineligible tensor."""
+        codec = Codec(CodecConfig(fused=True))
+        cs = [codec.compress(smooth_field((3000,), seed=31)),
+              codec.compress(smooth_field((20, 25), seed=32)),
+              codec.compress(smooth_field((4000,), seed=33)),
+              codec.compress(smooth_field((15, 30), seed=34))]
+        codec.backend.reset_stats()
+        outs = codec.decompress_batch(cs)
+        assert codec.stats["fused_fallbacks"] == 2
+        assert codec.stats["fused_dispatches"] >= 2
+        refs = Codec(CodecConfig()).decompress_batch(cs)
+        for out, ref in zip(outs, refs):
+            assert np.asarray(out).tobytes() == np.asarray(ref).tobytes()
+
+    def test_archive_read_uses_fused_path(self, tmp_path):
+        """The store reader threads the codec's fused policy into its
+        batched decode."""
+        from repro.store import Archive, write_archive
+
+        codec = Codec(CodecConfig(fused=True))
+        x = smooth_field((5000,), seed=35)
+        c = codec.compress(x)
+        path = str(tmp_path / "fused.szt")
+        write_archive(path, [("x", c, "float32")])
+        codec.backend.reset_stats()
+        with Archive(path, codec=codec) as ar:
+            out = ar.read_all()["x"]
+        assert codec.stats["fused_dispatches"] >= 1
+        assert codec.stats["fused_fallbacks"] == 0
+        want = Codec(CodecConfig()).decompress(c)
+        assert np.asarray(out).tobytes() == np.asarray(want).tobytes()
+
+    def test_invalid_fused_rejected(self):
+        with pytest.raises(ValueError, match="fused"):
+            CodecConfig(fused="yes")
+
+
 class TestPlanCacheReuse:
     def test_second_decompress_builds_zero_plans(self):
         codec = Codec()

@@ -201,6 +201,75 @@ class TestDecodeBatch:
         assert pp.decode_batch([], [], []) == []
 
 
+class TestFusedDecode:
+    """``decode(transform=...)`` fuses dequantize+reconstruct into phase 4;
+    output must be bit-exact with decoding the codes and then running
+    ``lorenzo.dequantize`` (the two-pass path)."""
+
+    RADIUS = 512
+
+    def _transform_and_oracle(self, syms):
+        from repro.core.sz import lorenzo
+
+        n = len(syms)
+        opos = np.full(8, -1, np.int32)
+        oval = np.zeros(8, np.int32)
+        opos[:3] = [1, n // 2, n - 1]
+        oval[:3] = [700, -900, 1500]
+        eb = 1e-3
+        tr = pp.OutputTransform(eb=eb, radius=self.RADIUS,
+                                outlier_pos=jnp.asarray(opos),
+                                outlier_val=jnp.asarray(oval))
+        oracle = lorenzo.dequantize(jnp.asarray(syms), jnp.asarray(opos),
+                                    jnp.asarray(oval), eb, (n,),
+                                    radius=self.RADIUS)
+        return tr, np.asarray(oracle)
+
+    @pytest.mark.parametrize("method", ["gap", "selfsync"])
+    @pytest.mark.parametrize(
+        "backend",
+        ["ref", pytest.param("pallas", marks=pytest.mark.slow)])
+    @pytest.mark.parametrize("strategy", ["tile", "padded"])
+    def test_matches_two_pass(self, rng, method, backend, strategy):
+        book, syms, stream = make_book_and_stream(rng, n_syms=4500)
+        tr, oracle = self._transform_and_oracle(syms)
+        out = pp.decode(stream, book, len(syms), method=method,
+                        backend=backend, strategy=strategy, transform=tr)
+        assert out.dtype == jnp.float32
+        assert np.asarray(out).tobytes() == oracle.tobytes()
+
+    def test_fused_dispatches_counted(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=2000)
+        tr, _ = self._transform_and_oracle(syms)
+        be = pp.get_backend("ref")
+        be.reset_stats()
+        pp.decode(stream, book, len(syms), strategy="tile", transform=tr)
+        assert be.stats["fused_dispatches"] == 1
+        assert be.stats["decode_write_dispatches"] == 1
+
+    def test_tuned_transform_raises(self, rng):
+        book, syms, stream = make_book_and_stream(rng, n_syms=1000)
+        tr, _ = self._transform_and_oracle(syms)
+        with pytest.raises(ValueError, match="tuned"):
+            pp.decode(stream, book, len(syms), strategy="tuned",
+                      transform=tr)
+
+    def test_backend_without_fused_ops_raises(self, rng):
+        """decode(transform=) on a fused-less backend is a hard error; the
+        silent fallback (+ counter) lives one level up, in
+        ``sz.compressor.decompress``."""
+        book, syms, stream = make_book_and_stream(rng, n_syms=1000)
+        tr, _ = self._transform_and_oracle(syms)
+        ref = pp.get_backend("ref")
+        bare = pp.DecodeBackend(name="bare", count_fn=ref.count_fn,
+                                sync_fn=ref.sync_fn, tiles_fn=ref.tiles_fn,
+                                padded_fn=ref.padded_fn)
+        assert not bare.supports_fused
+        with pytest.raises(ValueError, match="fused"):
+            pp.decode(stream, book, len(syms), backend=bare,
+                      strategy="tile", transform=tr)
+
+
 class TestDecompressBatch:
     def test_matches_per_tensor_decompress(self, rng):
         from repro.core import api
