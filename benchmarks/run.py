@@ -34,7 +34,13 @@ def main() -> None:
                     help="write rows to a JSON trajectory file")
     ap.add_argument("--compare", default=None, metavar="BENCH_old.json",
                     help="append vs_baseline speedups from a recorded run")
+    ap.add_argument("--gate", type=float, default=None, metavar="FACTOR",
+                    help="with --compare: exit 1 if any row is slower than "
+                         "FACTOR x its baseline (CI perf gate; pick FACTOR "
+                         "well above timer noise, e.g. 2.5)")
     args = ap.parse_args()
+    if args.gate is not None and not args.compare:
+        ap.error("--gate requires --compare")
     only = set(args.only.split(",")) if args.only else None
 
     baseline = {}
@@ -44,8 +50,9 @@ def main() -> None:
 
     from benchmarks import (arch_step, batch_decode, compression_ratio,
                             cr_sensitivity, decode_throughput,
-                            decoder_phases, e2e_decompression, fused_decode,
-                            roofline, shmem_tuning, store_throughput)
+                            decoder_phases, e2e_decompression,
+                            encode_throughput, fused_decode, roofline,
+                            shmem_tuning, store_throughput)
 
     suites = [
         ("tableV", decode_throughput.run),
@@ -57,10 +64,12 @@ def main() -> None:
         ("batch", batch_decode.run),
         ("store", store_throughput.run),
         ("fused", fused_decode.run),
+        ("encode", encode_throughput.run),
         ("arch", arch_step.run),
         ("roofline", roofline.run),
     ]
     all_rows = []
+    regressions = []
     print("name,us_per_call,derived")
     for key, fn in suites:
         if only and key not in only:
@@ -69,6 +78,8 @@ def main() -> None:
             rows = fn(quick=args.quick)
         except Exception as e:  # keep the harness robust: report and go on
             print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            if args.gate is not None:
+                regressions.append((f"{key}/ERROR", 0.0, 0.0))
             continue
         for name, us, derived in rows:
             # Record the un-annotated row: a trajectory file must not bake
@@ -76,11 +87,21 @@ def main() -> None:
             all_rows.append([name, us, derived])
             if name in baseline and us > 0:
                 derived = f"{derived};vs_baseline={baseline[name] / us:.2f}"
+                if args.gate is not None and us > args.gate * baseline[name]:
+                    regressions.append((name, us, baseline[name]))
             print(f"{name},{us:.1f},{derived}", flush=True)
 
     if args.record:
         with open(args.record, "w") as f:
             json.dump({"argv": sys.argv[1:], "rows": all_rows}, f, indent=1)
+
+    if regressions:
+        print(f"PERF GATE FAILED ({len(regressions)} rows > "
+              f"{args.gate:g}x baseline):", file=sys.stderr)
+        for name, us, base_us in regressions:
+            print(f"  {name}: {us:.1f}us vs baseline {base_us:.1f}us",
+                  file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

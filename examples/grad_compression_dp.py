@@ -1,33 +1,47 @@
 """Gradient compression over an explicit data-parallel mesh.
 
-    PYTHONPATH=src python examples/grad_compression_dp.py
+    PYTHONPATH=src python examples/grad_compression_dp.py [--steps N]
 
 Runs a tiny model replicated over an 8-way (forced CPU) data mesh and syncs
 gradients with the bf16-reduce-scatter + int8-all-gather wire format with
 error feedback (runtime/collectives.py).  Compares the loss trajectory with
-exact fp32 sync and reports the wire-byte saving.
+exact fp32 sync and reports the wire-byte saving.  A final section
+compresses one step's gradient tree through a device-encode ``Codec``
+(``CodecConfig(encode_backend="jnp")``) -- the write path the KV pager and
+checkpoint shards use -- and reports the SZ ratio plus encode dispatch
+counters.
 
 NOTE: must run as its own process (device count is locked at first jax use):
 the script re-execs itself with XLA_FLAGS when needed.
 """
 
+import argparse
 import os
 import sys
 
 if "--inner" not in sys.argv:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8 " \
         + os.environ.get("XLA_FLAGS", "")
-    os.execv(sys.executable, [sys.executable, __file__, "--inner"])
+    os.execv(sys.executable,
+             [sys.executable, __file__, "--inner"] + sys.argv[1:])
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.core import Codec, CodecConfig  # noqa: E402
+from repro.core.sz.compressor import Compressed  # noqa: E402
 from repro.launch.mesh import make_host_mesh  # noqa: E402
 from repro.runtime import collectives as C  # noqa: E402
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--inner", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--steps", type=int, default=60,
+                    help="optimizer steps per scheme (default 60)")
+    args = ap.parse_args()
+
     mesh = make_host_mesh(data=8)
     n_shards = 8
     dim = 512
@@ -46,11 +60,12 @@ def main():
         y = x @ w_true + 0.01 * jax.random.normal(k, (64,))
         return x, y
 
+    g_hist = []
     for scheme in ("exact_f32", "compressed"):
         w = jnp.zeros((dim,))
         res = init_res({"w": jnp.zeros((n_shards, dim))})
         losses = []
-        for step in range(60):
+        for step in range(args.steps):
             gs, ls = [], []
             for s in range(n_shards):
                 x, y = data_for(s, step)
@@ -62,6 +77,7 @@ def main():
             else:
                 out, res = sync({"w": g_stack}, res)
                 g = out["w"][0]
+                g_hist.append(g_stack)
             w = w - 0.05 * g
             losses.append(sum(ls) / n_shards)
         print(f"{scheme:12s}: loss {losses[0]:.4f} -> {losses[-1]:.6f}")
@@ -71,6 +87,30 @@ def main():
           f"{C.wire_bytes(n, 'allreduce_f32') / n:.1f}  "
           f"compressed={C.wire_bytes(n, 'rs_bf16_ag_int8') / n:.1f}  "
           f"({C.wire_bytes(n, 'allreduce_f32') / C.wire_bytes(n, 'rs_bf16_ag_int8'):.2f}x less traffic)")
+
+    # --- SZ-compress the gradient history through the device encode path ---
+    # The same write path the KV pager / checkpoint shards use: quantize ->
+    # histogram -> bit-pack stay device-resident; only the 1024-entry
+    # histogram crosses to host for codebook construction.  The per-shard
+    # gradient history (steps x shards x dim) is the kind of payload an
+    # in-step gradient logger would spill.
+    g_last = {"w": jnp.stack(g_hist)}
+    codec = Codec(CodecConfig(eb=1e-3, encode_backend="jnp"))
+    codec.reset_stats()
+    ctree = codec.compress_tree(g_last)
+    leaves = [c for c in jax.tree_util.tree_leaves(
+        ctree, is_leaf=lambda x: isinstance(x, Compressed))
+        if isinstance(c, Compressed)]
+    raw = sum(c.original_bytes for c in leaves)
+    stored = sum(c.compressed_bytes for c in leaves)
+    restored = codec.decompress_tree(ctree)
+    err = max(float(jnp.max(jnp.abs(restored[k] - g_last[k])))
+              for k in g_last)
+    st = codec.stats
+    print(f"grad tree via encode_backend='jnp': {raw} B -> {stored} B "
+          f"(ratio {raw / max(stored, 1):.2f}x, max err {err:.2e}; "
+          f"{st['encode_dispatches']} encode dispatches, "
+          f"{st['encode_fallbacks']} fallbacks)")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,25 @@ def crc32_arrays(*arrays) -> int:
     return crc & 0xFFFFFFFF
 
 
+def payload_crc(units, gaps, outlier_pos, outlier_val) -> int:
+    """Canonical CRC of a compressed payload: units, gaps, and only the
+    VALID outlier prefix (``pos >= 0``).
+
+    The outlier side list is padded to a power-of-two length, but that
+    width is a storage detail, not content: different producers (host vs
+    device encode backends, archive round-trips, re-padded copies) may
+    materialize different pad widths for the same logical payload.  Hashing
+    the valid prefix keeps the digest -- and therefore every plan-cache key
+    -- identical across all of them.  (Blob *integrity* CRCs, e.g.
+    ``store.ChunkRecord.crc32``, still cover the stored padded bytes.)
+    """
+    pos = np.asarray(outlier_pos, np.int32)
+    val = np.asarray(outlier_val, np.int32)
+    n = int((pos >= 0).sum())
+    return crc32_arrays(np.asarray(units, np.uint32),
+                        np.asarray(gaps, np.uint8), pos[:n], val[:n])
+
+
 def codebook_digest(enc_code, enc_len, max_len: int) -> str:
     """Content digest of a codebook (the dedup + LUT-cache key).
 
@@ -88,10 +107,8 @@ def compressed_digest(c) -> str:
             object.__setattr__(book, "_digest", cbd)
         except AttributeError:
             pass
-    crc = crc32_arrays(np.asarray(c.stream.units, np.uint32),
-                       np.asarray(c.stream.gaps, np.uint8),
-                       np.asarray(c.outlier_pos, np.int32),
-                       np.asarray(c.outlier_val, np.int32))
+    crc = payload_crc(c.stream.units, c.stream.gaps,
+                      c.outlier_pos, c.outlier_val)
     d = chunk_digest(crc, int(c.stream.total_bits), int(c.stream.n_symbols),
                      int(c.stream.subseqs_per_seq), cbd)
     try:

@@ -64,6 +64,18 @@ class CodecConfig:
       radius           Lorenzo quantization radius (2*radius bins)
       max_len          codeword length cap (decode-LUT size is 2**max_len)
       subseqs_per_seq  encoder framing (128-bit subsequences per sequence)
+      encode_backend   a ``pipeline.available_encode_backends()`` name:
+                       "ref" is the host write path (f64 prequantization +
+                       numpy histogram + searchsorted bit-pack); "jnp" /
+                       "pallas" / "pallas-compiled" run quantize ->
+                       outlier gather -> histogram -> bit-pack emit on
+                       device, transferring only the 2*radius-entry
+                       histogram to host for codebook construction.  The
+                       emitted ``Compressed`` payload is layout-identical
+                       across backends (decode never knows who wrote it);
+                       inputs a device backend cannot serve (non-float32)
+                       fall back to "ref" and count
+                       ``stats["encode_fallbacks"]``.
 
     Decoder side (paper policy knobs):
       method           "gap" (gap-array sync) | "selfsync" | "naive_ref"
@@ -90,6 +102,7 @@ class CodecConfig:
     radius: int = lorenzo.DEFAULT_RADIUS
     max_len: int = cb.DEFAULT_MAX_LEN
     subseqs_per_seq: int = he.DEFAULT_SUBSEQS_PER_SEQ
+    encode_backend: str = "ref"
     method: str = "gap"
     backend: str = "ref"
     strategy: str = "tile"
@@ -113,6 +126,10 @@ class CodecConfig:
         if self.backend not in hp.available_backends():
             raise ValueError(f"unknown backend {self.backend!r}; available: "
                              f"{hp.available_backends()}")
+        if self.encode_backend not in hp.available_encode_backends():
+            raise ValueError(
+                f"unknown encode_backend {self.encode_backend!r}; "
+                f"available: {hp.available_encode_backends()}")
         if self.t_high < 1:
             raise ValueError(f"t_high must be >= 1, got {self.t_high}")
         if self.radius < 2:
@@ -148,6 +165,8 @@ class Codec:
                  plan_cache: "PlanCache | None" = None):
         self.config = config if config is not None else CodecConfig()
         self.backend = hp.get_backend(self.config.backend)
+        self.encode_backend = hp.get_encode_backend(
+            self.config.encode_backend)
         self.plan_cache = (plan_cache if plan_cache is not None
                            else PlanCache(self.config.plan_cache_size))
 
@@ -164,11 +183,16 @@ class Codec:
         dispatch/plan-build counters are shared by every codec on the same
         backend (and ``reset_stats`` zeroes them for all of them); the
         plan-cache counters are per-codec unless a cache was injected.
+        The encode backend's write-path counters (``encode_dispatches``,
+        ``encode_fallbacks``, ``encoder_plan_builds``) merge in under their
+        own keys -- disjoint from the decode counters by construction.
         """
-        return {**self.backend.stats, **self.plan_cache.stats}
+        return {**self.backend.stats, **self.encode_backend.stats,
+                **self.plan_cache.stats}
 
     def reset_stats(self):
         self.backend.reset_stats()
+        self.encode_backend.reset_stats()
         self.plan_cache.reset_stats()
 
     # -- single tensors ------------------------------------------------------
@@ -177,7 +201,8 @@ class Codec:
         c = self.config
         return compressor.compress(x, eb=c.eb, mode=c.mode, radius=c.radius,
                                    max_len=c.max_len,
-                                   subseqs_per_seq=c.subseqs_per_seq)
+                                   subseqs_per_seq=c.subseqs_per_seq,
+                                   encode_backend=self.encode_backend)
 
     def build_plan(self, stream, codebook) -> hp.DecoderPlan:
         """Phase 1-3 plan under this codec's (method, backend, t_high)."""
@@ -338,7 +363,8 @@ def _replace_some(config: CodecConfig, **overrides) -> CodecConfig:
 
 def compress(x, eb: "float | None" = None, mode: "str | None" = None,
              radius: "int | None" = None, max_len: "int | None" = None,
-             subseqs_per_seq: "int | None" = None, **removed) -> Compressed:
+             subseqs_per_seq: "int | None" = None,
+             encode_backend: "str | None" = None, **removed) -> Compressed:
     """Compress a float tensor (shim over a default ``Codec``).
 
     mode="rel": bound is ``eb * (max(x) - min(x))`` (the paper's setting,
@@ -348,7 +374,8 @@ def compress(x, eb: "float | None" = None, mode: "str | None" = None,
     _reject_removed("compress", removed)
     cfg = _replace_some(default_codec().config, eb=eb, mode=mode,
                         radius=radius, max_len=max_len,
-                        subseqs_per_seq=subseqs_per_seq)
+                        subseqs_per_seq=subseqs_per_seq,
+                        encode_backend=encode_backend)
     return _codec_for(cfg).compress(x)
 
 

@@ -71,30 +71,31 @@ def _ceil_to(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-@partial(jax.jit, static_argnames=("n_units_padded", "subseqs_per_seq"))
-def _encode_padded(
-    symbols: jnp.ndarray,
-    enc_code: jnp.ndarray,
-    enc_len: jnp.ndarray,
-    n_units_padded: int,
-    subseqs_per_seq: int,
-) -> EncodedStream:
-    """Core vectorized encoder; ``n_units_padded`` fixed for jit."""
-    symbols = symbols.astype(jnp.int32)
-    lens = enc_len[symbols].astype(jnp.int32)          # [N]
-    starts = jnp.cumsum(lens) - lens                   # exclusive scan [N]
-    total_bits = (starts[-1] + lens[-1]).astype(jnp.int32)
+def units_for_bits(total_bits: int, subseqs_per_seq: int) -> int:
+    """Padded unit count for a ``total_bits`` payload (whole sequences).
 
-    n_bits_padded = n_units_padded * UNIT_BITS
+    The single audited home of the padding formula: the host encoder, the
+    device ``EncoderPlan`` (which sizes the padded stream from a histogram
+    instead of the symbol array), and the Pallas bit-pack wrapper all call
+    this so every backend emits the same layout.
+    """
+    n_units = _ceil_to(max(int(total_bits), 1), UNIT_BITS) // UNIT_BITS
+    return _ceil_to(n_units, SUBSEQ_UNITS * subseqs_per_seq)
 
-    # --- bit materialization -------------------------------------------
-    # For every output bit b: which symbol covers it, and which bit of that
-    # symbol's codeword is it?  searchsorted over the starts array.
+
+def pack_bits(starts, lens, codes, total_bits, n_bits_padded: int):
+    """Materialize the packed uint32 units from per-symbol placement.
+
+    ``starts`` is the exclusive prefix sum of codeword lengths, ``codes``
+    the right-aligned codewords; for every output bit a ``searchsorted``
+    finds the covering symbol (traced helper, shared by the jit encoder and
+    the jnp oracle of the Pallas bit-pack kernel).
+    """
     bit_idx = jnp.arange(n_bits_padded, dtype=jnp.int32)
     owner = jnp.searchsorted(starts, bit_idx, side="right") - 1  # [B]
-    owner = jnp.clip(owner, 0, symbols.shape[0] - 1)
+    owner = jnp.clip(owner, 0, starts.shape[0] - 1)
     within = bit_idx - starts[owner]
-    code = enc_code[symbols[owner]].astype(jnp.uint32)
+    code = codes[owner].astype(jnp.uint32)
     length = lens[owner]
     # MSB-first: bit 0 of the codeword is its most significant bit.
     shift = jnp.maximum(length - 1 - within, 0).astype(jnp.uint32)
@@ -103,11 +104,19 @@ def _encode_padded(
 
     # Pack MSB-first into uint32 units.
     weights = (jnp.uint32(1) << jnp.arange(31, -1, -1, dtype=jnp.uint32))
-    units = (bits.reshape(-1, UNIT_BITS) * weights[None, :]).sum(
+    return (bits.reshape(-1, UNIT_BITS) * weights[None, :]).sum(
         axis=1, dtype=jnp.uint32
     )
 
-    # --- subsequence metadata ------------------------------------------
+
+def stream_metadata(starts, total_bits, n_units_padded: int,
+                    subseqs_per_seq: int):
+    """Gap array + per-subsequence counts from codeword start positions.
+
+    Pure metadata math (no payload access), shared by the jit encoder and
+    the Pallas bit-pack wrapper so every encode backend emits bit-identical
+    ``gaps`` / ``counts`` / ``seq_counts``.
+    """
     n_subseq = n_units_padded // SUBSEQ_UNITS
     boundaries = jnp.arange(n_subseq, dtype=jnp.int32) * SUBSEQ_BITS
     # First codeword start at-or-after each boundary.
@@ -123,7 +132,28 @@ def _encode_padded(
     seq_counts = counts.reshape(-1, subseqs_per_seq).sum(
         axis=1, dtype=jnp.int32
     )
+    return gaps, counts, seq_counts
 
+
+@partial(jax.jit, static_argnames=("n_units_padded", "subseqs_per_seq"))
+def _encode_padded(
+    symbols: jnp.ndarray,
+    enc_code: jnp.ndarray,
+    enc_len: jnp.ndarray,
+    n_units_padded: int,
+    subseqs_per_seq: int,
+) -> EncodedStream:
+    """Core vectorized encoder; ``n_units_padded`` fixed for jit."""
+    symbols = symbols.astype(jnp.int32)
+    lens = enc_len[symbols].astype(jnp.int32)          # [N]
+    starts = jnp.cumsum(lens) - lens                   # exclusive scan [N]
+    total_bits = (starts[-1] + lens[-1]).astype(jnp.int32)
+
+    units = pack_bits(starts, lens, enc_code[symbols], total_bits,
+                      n_units_padded * UNIT_BITS)
+    gaps, counts, seq_counts = stream_metadata(starts, total_bits,
+                                               n_units_padded,
+                                               subseqs_per_seq)
     return EncodedStream(
         units=units,
         gaps=gaps,
@@ -131,6 +161,125 @@ def _encode_padded(
         seq_counts=seq_counts,
         total_bits=total_bits,
         n_symbols=jnp.asarray(symbols.shape[0], jnp.int32),
+        subseqs_per_seq=subseqs_per_seq,
+    )
+
+
+@partial(jax.jit, static_argnames=("n_units_padded", "subseqs_per_seq",
+                                   "min_len"))
+def _encode_gather_padded(
+    symbols: jnp.ndarray,
+    enc_code: jnp.ndarray,
+    enc_len: jnp.ndarray,
+    n_units_padded: int,
+    subseqs_per_seq: int,
+    min_len: int,
+) -> EncodedStream:
+    """Per-unit gather encoder: the Pallas bit-pack kernel's math in jnp.
+
+    Where :func:`pack_bits` materializes every output *bit* (a
+    ``searchsorted`` per bit -- O(total_bits * log n)), this walks output
+    *units*: each uint32 unit gathers the <= ``32 // min_len + 2`` codewords
+    that can overlap its 32-bit window (one left-crosser plus the starts
+    inside it -- the same static lane budget as
+    ``kernels/huffman_encode.pack_tiles``) and ORs together their hi/lo
+    split contributions.  Bit-identical to ``_encode_padded`` (asserted by
+    the encode parity matrix) at a fraction of the work; this is the
+    "jnp" encode backend's pack, i.e. the timeable device proxy for the
+    kernel.
+    """
+    sym = symbols.astype(jnp.int32)
+    n = sym.shape[0]
+    lens = enc_len[sym].astype(jnp.int32)              # [N]
+    starts = jnp.cumsum(lens) - lens                   # exclusive scan [N]
+    total_bits = (starts[-1] + lens[-1]).astype(jnp.int32)
+    codes = enc_code[sym].astype(jnp.uint32)
+
+    lanes = UNIT_BITS // max(min_len, 1) + 2
+    base = jnp.arange(n_units_padded, dtype=jnp.int32) * UNIT_BITS
+    # Last codeword starting at-or-before each unit's first bit: the only
+    # candidate that can cross in from the left (codewords are contiguous).
+    s0 = jnp.clip(jnp.searchsorted(starts, base, side="right") - 1, 0, n - 1)
+    k = s0[:, None] + jnp.arange(lanes, dtype=jnp.int32)[None, :]
+    valid = k < n
+    kc = jnp.clip(k, 0, n - 1)
+    st = starts[kc]
+    length = jnp.where(valid, lens[kc], 0)
+    code = codes[kc]
+
+    # Unit-local placement (p may be negative for the left-crosser); the
+    # codeword occupies the 64-bit window ``code << (64 - o - length)``
+    # whose high word lands in unit ``u`` and low word in ``u + 1`` --
+    # identical arithmetic to kernels/huffman_encode._pack_kernel.
+    p = st - base[:, None]
+    u = p >> 5
+    o = p & 31
+    shift = 64 - o - length
+    hi = jnp.where(
+        shift >= 32,
+        code << jnp.clip(shift - 32, 0, 31).astype(jnp.uint32),
+        code >> jnp.clip(32 - shift, 0, 31).astype(jnp.uint32),
+    )
+    lo = jnp.where(shift >= 32, jnp.uint32(0),
+                   code << jnp.clip(shift, 0, 31).astype(jnp.uint32))
+    active = length > 0
+    contrib = (jnp.where(active & (u == 0), hi, jnp.uint32(0))
+               | jnp.where(active & (u == -1), lo, jnp.uint32(0)))
+    units = jax.lax.reduce(contrib, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+
+    gaps, counts, seq_counts = stream_metadata(starts, total_bits,
+                                               n_units_padded,
+                                               subseqs_per_seq)
+    return EncodedStream(
+        units=units,
+        gaps=gaps,
+        counts=counts,
+        seq_counts=seq_counts,
+        total_bits=total_bits,
+        n_symbols=jnp.asarray(n, jnp.int32),
+        subseqs_per_seq=subseqs_per_seq,
+    )
+
+
+def encode_gather(
+    symbols,
+    enc_code,
+    enc_len,
+    total_bits: int,
+    subseqs_per_seq: int = DEFAULT_SUBSEQS_PER_SEQ,
+    min_len: int = 1,
+) -> EncodedStream:
+    """Device-proxy encode: per-unit gather pack under a known bit total.
+
+    ``total_bits`` comes from the ``EncoderPlan`` (histogram dot lengths),
+    so the symbol array never has to visit the host for sizing.
+    """
+    if int(symbols.shape[0]) == 0:
+        return empty_stream(subseqs_per_seq)
+    n_units_padded = units_for_bits(total_bits, subseqs_per_seq)
+    return _encode_gather_padded(jnp.asarray(symbols), jnp.asarray(enc_code),
+                                 jnp.asarray(enc_len),
+                                 n_units_padded=n_units_padded,
+                                 subseqs_per_seq=subseqs_per_seq,
+                                 min_len=int(min_len))
+
+
+def empty_stream(subseqs_per_seq: int = DEFAULT_SUBSEQS_PER_SEQ
+                 ) -> EncodedStream:
+    """A valid zero-symbol stream (one zero-padded sequence).
+
+    ``_encode_padded`` indexes ``starts[-1]`` and so cannot trace an empty
+    symbol array; every encode entry point routes empty inputs here instead.
+    """
+    n_units_padded = units_for_bits(0, subseqs_per_seq)
+    n_subseq = n_units_padded // SUBSEQ_UNITS
+    return EncodedStream(
+        units=jnp.zeros((n_units_padded,), jnp.uint32),
+        gaps=jnp.zeros((n_subseq,), jnp.uint8),
+        counts=jnp.zeros((n_subseq,), jnp.int32),
+        seq_counts=jnp.zeros((n_subseq // subseqs_per_seq,), jnp.int32),
+        total_bits=jnp.asarray(0, jnp.int32),
+        n_symbols=jnp.asarray(0, jnp.int32),
         subseqs_per_seq=subseqs_per_seq,
     )
 
@@ -147,10 +296,11 @@ def encode(
     jit cache keys on (n_units_padded, subseqs_per_seq) only.
     """
     symbols_np = np.asarray(symbols)
+    if symbols_np.size == 0:
+        return empty_stream(subseqs_per_seq)
     enc_len_np = np.asarray(enc_len)
     total_bits = int(enc_len_np[symbols_np].astype(np.int64).sum())
-    n_units = _ceil_to(max(total_bits, 1), UNIT_BITS) // UNIT_BITS
-    n_units_padded = _ceil_to(n_units, SUBSEQ_UNITS * subseqs_per_seq)
+    n_units_padded = units_for_bits(total_bits, subseqs_per_seq)
     return _encode_padded(
         jnp.asarray(symbols_np),
         jnp.asarray(enc_code),

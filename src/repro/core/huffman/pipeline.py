@@ -30,6 +30,7 @@ assert the batched path issues at most one dispatch per CR class.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
@@ -372,6 +373,237 @@ register_backend("ref", _make_ref_backend)
 register_backend("pallas", _make_pallas_backend)
 register_backend("pallas-compiled",
                  lambda: _make_pallas_backend(interpret=False))
+
+
+# ---------------------------------------------------------------------------
+# Encode-side backend registry (the write-path twin of the decode registry)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EncodeBackend:
+    """One implementation of the encode phases (quantize/histogram/bit-pack).
+
+    ``device=True`` backends keep the full-size arrays resident: quantize
+    runs in-graph (f32), the histogram kernel reduces the codes on device,
+    and the only host transfer before the bit-pack dispatch is the
+    ``2*radius``-entry histogram (codebook construction is host numpy --
+    the ISSUE-sanctioned small transfer).  The "ref" backend is the host
+    path (f64 prequantization + numpy histogram), kept as the storage-grade
+    oracle.
+
+    ``quantize_fn``  (x, abs_eb, radius) -> (codes u16, outlier bool,
+                     residual i32), shapes matching ``x``
+    ``hist_fn``      (codes, nbins) -> int32[nbins]
+    ``pack_fn``      (symbols, enc_code, enc_len, total_bits, sps, min_len)
+                     -> ``EncodedStream``
+
+    Every bit-pack launch is counted in ``stats["encode_dispatches"]``;
+    compress requests a device backend cannot serve (non-float32 inputs)
+    fall back to the host path, counted in ``stats["encode_fallbacks"]``,
+    never wrong.
+    """
+
+    name: str
+    device: bool
+    quantize_fn: Callable
+    hist_fn: Callable
+    pack_fn: Callable
+    stats: dict = dataclasses.field(
+        default_factory=lambda: {"encode_dispatches": 0,
+                                 "encode_fallbacks": 0,
+                                 "encoder_plan_builds": 0})
+
+    def reset_stats(self):
+        for k in self.stats:
+            self.stats[k] = 0
+
+    def pack(self, symbols, enc_code, enc_len, total_bits, sps, min_len):
+        self.stats["encode_dispatches"] += 1
+        return self.pack_fn(symbols, enc_code, enc_len, total_bits, sps,
+                            min_len)
+
+
+_ENCODE_FACTORIES: dict[str, Callable[[], EncodeBackend]] = {}
+_ENCODE_BACKENDS: dict[str, EncodeBackend] = {}
+
+
+def register_encode_backend(name: str, factory: Callable[[], EncodeBackend]):
+    """Register (or replace) an encode backend under ``name`` (lazy factory,
+    same contract as :func:`register_backend`)."""
+    _ENCODE_FACTORIES[name] = factory
+    _ENCODE_BACKENDS.pop(name, None)
+
+
+def available_encode_backends() -> list[str]:
+    return sorted(_ENCODE_FACTORIES)
+
+
+def get_encode_backend(backend: "str | EncodeBackend") -> EncodeBackend:
+    if isinstance(backend, EncodeBackend):
+        return backend
+    if backend not in _ENCODE_FACTORIES:
+        raise ValueError(f"unknown encode backend {backend!r}; available: "
+                         f"{available_encode_backends()}")
+    if backend not in _ENCODE_BACKENDS:
+        _ENCODE_BACKENDS[backend] = _ENCODE_FACTORIES[backend]()
+    return _ENCODE_BACKENDS[backend]
+
+
+def _host_quantize(x, abs_eb, radius):
+    from repro.core.sz import lorenzo  # lazy: core.sz imports this module
+
+    return lorenzo.quantize_host(np.asarray(x), abs_eb, radius=radius)
+
+
+def _jnp_quantize(x, abs_eb, radius):
+    from repro.core.sz import lorenzo
+
+    return lorenzo.quantize(jnp.asarray(x), abs_eb, radius=radius)
+
+
+def _ref_pack(symbols, enc_code, enc_len, total_bits, sps, min_len):
+    del min_len  # only sizes the gather/kernel lane budgets
+    from repro.core.huffman import encode as he
+
+    symbols = jnp.asarray(symbols)
+    if symbols.shape[0] == 0:
+        return he.empty_stream(sps)
+    return he._encode_padded(symbols, jnp.asarray(enc_code),
+                             jnp.asarray(enc_len),
+                             n_units_padded=he.units_for_bits(total_bits, sps),
+                             subseqs_per_seq=sps)
+
+
+def _gather_pack(symbols, enc_code, enc_len, total_bits, sps, min_len):
+    from repro.core.huffman import encode as he
+
+    return he.encode_gather(jnp.asarray(symbols), enc_code, enc_len,
+                            total_bits, subseqs_per_seq=sps, min_len=min_len)
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "chunk"))
+def _sorted_histogram(codes, nbins: int, chunk: int = 4096):
+    """Exact histogram via chunked sort + per-row edge searchsorted.
+
+    XLA lowers a scatter-add histogram (``jnp.bincount``) to a serial
+    scatter; sorting fixed-size rows and differencing the edge positions is
+    the same O(n) answer built from primitives that vectorize.  Rows are
+    padded with ``nbins`` (an out-of-range key) so the tail never perturbs
+    a real bin.
+    """
+    flat = codes.reshape(-1).astype(jnp.int32)
+    pad = (-flat.shape[0]) % chunk
+    rows = jnp.pad(flat, (0, pad), constant_values=nbins).reshape(-1, chunk)
+    rows = jnp.sort(rows, axis=1)
+    edges = jnp.arange(nbins + 1, dtype=jnp.int32)
+    cuts = jax.vmap(lambda r: jnp.searchsorted(r, edges, side="left"))(rows)
+    return (cuts[:, 1:] - cuts[:, :-1]).sum(axis=0).astype(jnp.int32)
+
+
+def _make_ref_encode_backend() -> EncodeBackend:
+    """The current host path: f64 prequantization, numpy histogram, and the
+    jit bit materialization sized from a host pass over the symbols."""
+    def hist(codes, nbins):
+        return np.bincount(np.asarray(codes).reshape(-1), minlength=nbins)
+
+    return EncodeBackend(name="ref", device=False,
+                         quantize_fn=_host_quantize, hist_fn=hist,
+                         pack_fn=_ref_pack)
+
+
+def _make_jnp_encode_backend() -> EncodeBackend:
+    """Device-resident pure-jnp pipeline: in-graph f32 quantize, sorted
+    device histogram, and the per-unit gather bit-pack -- sized from the
+    histogram, so no full-size array crosses to host (the timeable device
+    proxy of the kernel backends, exactly like "ref" on the decode side)."""
+    return EncodeBackend(name="jnp", device=True, quantize_fn=_jnp_quantize,
+                         hist_fn=_sorted_histogram, pack_fn=_gather_pack)
+
+
+def _make_pallas_encode_backend(interpret: bool = True) -> EncodeBackend:
+    """Kernel backend: Lorenzo quantize + histogram + bit-pack kernels
+    (``interpret=True`` is the CPU-safe default of this container)."""
+    from repro.kernels import ops  # lazy: keeps core jnp-only by default
+
+    def quantize(x, abs_eb, radius):
+        x = jnp.asarray(x)
+        if x.ndim == 1:
+            return ops.lorenzo_quantize(x, abs_eb, radius=radius,
+                                        interpret=interpret)
+        return _jnp_quantize(x, abs_eb, radius)
+
+    def pack(symbols, enc_code, enc_len, total_bits, sps, min_len):
+        return ops.encode_bitpack(symbols, enc_code, enc_len, total_bits,
+                                  sps, min_len=min_len, interpret=interpret)
+
+    name = "pallas" if interpret else "pallas-compiled"
+    return EncodeBackend(
+        name=name, device=True, quantize_fn=quantize,
+        hist_fn=functools.partial(ops.histogram, interpret=interpret),
+        pack_fn=pack)
+
+
+register_encode_backend("ref", _make_ref_encode_backend)
+register_encode_backend("jnp", _make_jnp_encode_backend)
+register_encode_backend("pallas", _make_pallas_encode_backend)
+register_encode_backend("pallas-compiled",
+                        lambda: _make_pallas_encode_backend(interpret=False))
+
+
+@dataclasses.dataclass
+class EncoderPlan:
+    """Everything the bit-pack dispatch needs, sized without touching the
+    symbol array: the canonical codebook (host package-merge over the
+    histogram), its tables as device arrays, and the exact payload size
+    ``total_bits = sum(freq * code_lengths)`` -- so a device backend's only
+    pre-pack host transfer is the ``2*radius``-entry histogram."""
+
+    codebook: Any               # core.huffman.codebook.Codebook
+    enc_code: jnp.ndarray       # uint32[K] on device
+    enc_len: jnp.ndarray        # uint8[K] on device
+    total_bits: int
+    subseqs_per_seq: int
+
+    @property
+    def min_len(self) -> int:
+        return self.codebook.min_len
+
+
+def build_encoder_plan(freq, max_len: int, subseqs_per_seq: int,
+                       backend: "str | EncodeBackend" = "ref") -> EncoderPlan:
+    """Histogram -> canonical length-limited codebook -> placement sizes.
+
+    ``freq`` may live on device; the host transfer of these ``2*radius``
+    counts is the entire host involvement of a device-backend encode (the
+    package-merge length limiting stays numpy, as the ISSUE sanctions).
+    Counted in ``backend.stats["encoder_plan_builds"]``.
+    """
+    from repro.core.huffman import codebook as cb
+
+    be = get_encode_backend(backend)
+    be.stats["encoder_plan_builds"] += 1
+    freq_np = np.asarray(freq, dtype=np.int64)
+    book = cb.build_codebook(freq_np, max_len=max_len)
+    total_bits = int((freq_np * book.enc_len.astype(np.int64)).sum())
+    return EncoderPlan(codebook=book,
+                       enc_code=jnp.asarray(book.enc_code),
+                       enc_len=jnp.asarray(book.enc_len),
+                       total_bits=total_bits,
+                       subseqs_per_seq=subseqs_per_seq)
+
+
+def encode_with_plan(symbols, plan: EncoderPlan,
+                     backend: "str | EncodeBackend" = "ref") -> EncodedStream:
+    """Bit-pack ``symbols`` through ``backend`` under a prebuilt plan.
+
+    The emitted ``EncodedStream`` layout is identical across backends
+    (asserted bit-exact by the encode parity matrix in tests), so decode
+    never knows which backend wrote the bytes.
+    """
+    be = get_encode_backend(backend)
+    return be.pack(symbols, plan.enc_code, plan.enc_len, plan.total_bits,
+                   plan.subseqs_per_seq, plan.min_len)
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,9 @@ or Pallas kernels.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -75,6 +77,46 @@ class Compressed:
         return self.eb + float(np.spacing(np.float32(self.max_abs + self.eb)))
 
 
+def _outlier_m_pad(n_out: int) -> int:
+    """Power-of-two side-list padding; shared by host and device gather so
+    identical logical payloads get identical padded layouts."""
+    return max(8, int(2 ** np.ceil(np.log2(max(n_out, 1) + 1))))
+
+
+@partial(jax.jit, static_argnames=("m_pad",))
+def _gather_outliers(csum, resid_flat, m_pad: int):
+    """Compact the outlier side list from an inclusive mask prefix sum.
+
+    ``jnp.nonzero(size=...)`` lowers to a full-length scatter (serial on
+    CPU, uncoalesced on accelerators); the k-th outlier's position is just
+    ``searchsorted(csum, k + 1)`` -- ``m_pad`` binary searches and one
+    gather, no scatter anywhere.  Ascending positions, -1/-0 padded, byte
+    matching the host path's ``np.nonzero`` layout.
+    """
+    m = csum[-1]
+    k = jnp.arange(1, m_pad + 1, dtype=jnp.int32)
+    pos = jnp.searchsorted(csum, k, side="left").astype(jnp.int32)
+    pos = jnp.where(k <= m, pos, -1)
+    val = jnp.where(pos >= 0,
+                    resid_flat[jnp.clip(pos, 0)].astype(jnp.int32), 0)
+    return pos, val
+
+
+def encode_unsupported_reason(x, backend) -> "str | None":
+    """Why the device encode path cannot serve this tensor (None = it can).
+
+    The in-graph quantizer is float32 (``lorenzo.quantize``); other dtypes
+    fall back to the host path -- counted in
+    ``stats["encode_fallbacks"]``, never wrong.
+    """
+    be = hp.get_encode_backend(backend)
+    if not be.device:
+        return f"backend {be.name!r} is the host path"
+    if jnp.asarray(x).dtype != jnp.float32:
+        return f"dtype {x.dtype} is not float32 (in-graph quantizer is f32)"
+    return None
+
+
 def compress(
     x,
     eb: float = DEFAULT_EB,
@@ -82,11 +124,23 @@ def compress(
     radius: int = lorenzo.DEFAULT_RADIUS,
     max_len: int = cb.DEFAULT_MAX_LEN,
     subseqs_per_seq: int = he.DEFAULT_SUBSEQS_PER_SEQ,
+    encode_backend: str = "ref",
 ) -> Compressed:
     """Compress a float tensor with error bound ``eb``.
 
     mode="rel": bound is ``eb * (max(x) - min(x))`` (the paper's setting,
     "relative error bound 1e-3"); mode="abs": bound is ``eb`` directly.
+
+    ``encode_backend`` selects the write-path pipeline
+    (``pipeline.available_encode_backends()``): "ref" is the host path
+    (float64 prequantization + numpy histogram); "jnp" / "pallas" run
+    quantize -> outlier gather -> histogram -> bit-pack device-resident,
+    with only the ``2*radius``-entry histogram crossing to host for
+    codebook construction.  Device backends quantize in float32, so for
+    eb far above ulp scale (the supported regime) the codes -- and
+    therefore the emitted bytes -- match the host path; inputs a device
+    backend cannot serve fall back to "ref", counted in
+    ``stats["encode_fallbacks"]``.
     """
     x = jnp.asarray(x)
     if mode == "rel":
@@ -98,29 +152,47 @@ def compress(
         abs_eb = eb
     else:
         raise ValueError(f"unknown mode {mode!r}")
+    max_abs = float(jnp.max(jnp.abs(x)))
 
-    codes_np, outlier, resid = lorenzo.quantize_host(
-        np.asarray(x), abs_eb, radius=radius)
-    codes_np = codes_np.reshape(-1)
+    ebe = hp.get_encode_backend(encode_backend)
+    if ebe.device and encode_unsupported_reason(x, ebe) is not None:
+        ebe.stats["encode_fallbacks"] += 1
+        ebe = hp.get_encode_backend("ref")
 
-    # Outlier side list (exact residuals), padded to a power-of-two length.
-    pos = np.nonzero(np.asarray(outlier).reshape(-1))[0].astype(np.int32)
-    vals = np.asarray(resid).reshape(-1)[pos].astype(np.int32)
-    m_pad = max(8, int(2 ** np.ceil(np.log2(max(len(pos), 1) + 1))))
-    pos_pad = np.full(m_pad, -1, np.int32)
-    val_pad = np.zeros(m_pad, np.int32)
-    pos_pad[: len(pos)] = pos
-    val_pad[: len(pos)] = vals
+    if ebe.device:
+        # Same int32-lattice guard the host prequantizer raises.
+        if np.round(max_abs / (2.0 * abs_eb)) >= 2**31 - 1:
+            raise ValueError(
+                "error bound too small for int32 lattice; increase eb")
+        codes, outlier, resid = ebe.quantize_fn(x, abs_eb, radius)
+        codes_flat = codes.reshape(-1)
+        csum = jnp.cumsum(outlier.reshape(-1).astype(jnp.int32))
+        # One scalar sync sizes the side list; the gather stays on device.
+        m_pad = _outlier_m_pad(int(csum[-1]))
+        pos_pad, val_pad = _gather_outliers(csum, resid.reshape(-1), m_pad)
+        freq = ebe.hist_fn(codes_flat, 2 * radius)
+    else:
+        codes_np, outlier, resid = ebe.quantize_fn(x, abs_eb, radius)
+        codes_flat = codes_np.reshape(-1)
 
-    # Histogram -> codebook -> encode.
-    freq = np.bincount(codes_np, minlength=2 * radius)
-    book = cb.build_codebook(freq, max_len=max_len)
-    stream = he.encode(codes_np, book.enc_code, book.enc_len,
-                       subseqs_per_seq=subseqs_per_seq)
+        # Outlier side list (exact residuals), padded to power-of-two length.
+        pos = np.nonzero(np.asarray(outlier).reshape(-1))[0].astype(np.int32)
+        vals = np.asarray(resid).reshape(-1)[pos].astype(np.int32)
+        m_pad = _outlier_m_pad(len(pos))
+        pos_pad = np.full(m_pad, -1, np.int32)
+        val_pad = np.zeros(m_pad, np.int32)
+        pos_pad[: len(pos)] = pos
+        val_pad[: len(pos)] = vals
+        freq = ebe.hist_fn(codes_flat, 2 * radius)
+
+    # Histogram -> codebook (host package-merge) -> bit-pack dispatch.
+    plan = hp.build_encoder_plan(freq, max_len=max_len,
+                                 subseqs_per_seq=subseqs_per_seq, backend=ebe)
+    stream = hp.encode_with_plan(codes_flat, plan, backend=ebe)
 
     return Compressed(
         stream=stream,
-        codebook=book,
+        codebook=plan.codebook,
         outlier_pos=jnp.asarray(pos_pad),
         outlier_val=jnp.asarray(val_pad),
         shape=tuple(x.shape),
@@ -128,7 +200,7 @@ def compress(
         eb=abs_eb,
         radius=radius,
         rel_range=rng,
-        max_abs=float(jnp.max(jnp.abs(x))),
+        max_abs=max_abs,
     )
 
 

@@ -1,0 +1,95 @@
+"""Pallas bit-pack emit kernel: the write-path twin of the decode kernels.
+
+The decode side turned the paper's phases into kernels; this module does
+the same for phase 4 of the *encoder* (DESIGN.md §9 stream layout).  The
+host encoder materializes every output bit with a ``searchsorted`` over
+codeword start positions; here each grid step owns one ``tile_units``-word
+output tile and the symbols overlapping it are gathered up front (ops-level
+metadata prep, exactly like the decode kernels' tile->subsequence mapping):
+
+* A per-tile prefix-sum over code lengths (the exclusive ``starts`` scan,
+  computed once on device) places each symbol's first bit; the lane budget
+  ``sym_max`` is static -- at most one codeword crosses into the tile from
+  the left plus ``tile_bits // min_len`` starts inside it.
+* Each lane splits its (<= 32-bit, so at most unit-spanning) codeword into
+  the two uint32 words it touches with shift arithmetic, then a vector
+  scatter-ADD accumulates the tile.  Codeword bit ranges are disjoint, so
+  add IS or -- the writes are atomic-free by construction.
+* Out-of-tile halves (the left-crosser's high word, the right edge's low
+  word) are dropped; the neighbouring tiles emit those bits from their own
+  view of the same symbols.  No cross-tile carries, no sequential grid.
+
+The jnp oracle is ``core.huffman.encode._encode_padded`` (the bit
+materialization path); tests assert byte-identical units across backends.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(code_ref, len_ref, start_ref, out_ref, *, tile_units):
+    code = code_ref[0, :].astype(jnp.uint32)
+    length = len_ref[0, :]                    # int32; 0 => inactive lane
+    p = start_ref[0, :]                       # tile-local first-bit position
+    # p may be negative (codeword crossing in from the previous tile):
+    # arithmetic shift / mask give the floor unit and in-unit offset.
+    u = p >> 5
+    o = p & 31
+
+    # Left-align the codeword in the 64-bit window starting at unit u:
+    # value64 = code << (64 - o - length); hi lands in unit u, lo in u + 1.
+    shift = 64 - o - length                   # in [1, 63] for active lanes
+    hi = jnp.where(
+        shift >= 32,
+        code << jnp.clip(shift - 32, 0, 31).astype(jnp.uint32),
+        code >> jnp.clip(32 - shift, 0, 31).astype(jnp.uint32),
+    )
+    lo = jnp.where(
+        shift >= 32, jnp.uint32(0),
+        # uint32 << keeps the low 32 bits -- exactly value64 & 0xffffffff.
+        code << jnp.clip(shift, 0, 31).astype(jnp.uint32),
+    )
+    active = length > 0
+    hi = jnp.where(active, hi, jnp.uint32(0))
+    lo = jnp.where(active, lo, jnp.uint32(0))
+
+    # Scatter-add == scatter-or (disjoint bit ranges).  mode="drop" sheds
+    # the halves owned by neighbouring tiles; a negative u must be routed
+    # out the HIGH side first (negative indices would wrap, not drop).
+    u_hi = jnp.where(u >= 0, u, tile_units)
+    units = jnp.zeros((tile_units,), jnp.uint32)
+    units = units.at[u_hi].add(hi, mode="drop")
+    units = units.at[u + 1].add(lo, mode="drop")
+    out_ref[...] = units
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_units_padded", "tile_units", "sym_max", "interpret"))
+def pack_tiles(tile_code, tile_len, tile_start, n_units_padded: int,
+               tile_units: int, sym_max: int, interpret: bool = True):
+    """Emit the packed uint32 units from per-tile gathered symbol metadata.
+
+    ``tile_code`` / ``tile_len`` / ``tile_start`` are (n_tiles, sym_max)
+    arrays built by ``repro.kernels.ops.encode_bitpack``: the codewords
+    overlapping each tile, their lengths (0 for inactive lanes) and their
+    tile-local start bit (negative for the left-crossing codeword).
+    """
+    n_tiles = n_units_padded // tile_units
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, tile_units=tile_units),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, sym_max), lambda i: (i, 0)),
+            pl.BlockSpec((1, sym_max), lambda i: (i, 0)),
+            pl.BlockSpec((1, sym_max), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_units,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_units_padded,), jnp.uint32),
+        interpret=interpret,
+    )(tile_code, tile_len, tile_start)

@@ -13,11 +13,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.huffman import decode as hd
+from repro.core.huffman import encode as he
 from repro.core.huffman.bits import SUBSEQ_BITS
 from repro.kernels import common as C
 from repro.kernels import fused_decode as _fus
 from repro.kernels import histogram as _hist
 from repro.kernels import huffman_decode as _dec
+from repro.kernels import huffman_encode as _enc
 from repro.kernels import huffman_selfsync as _sync
 from repro.kernels import lorenzo as _lor
 
@@ -240,6 +242,79 @@ def selfsync_sync(units, dec_sym, dec_len, total_bits, n_subseq: int,
 
     start_abs = boundaries + start.reshape(-1)
     return start_abs, counts.reshape(-1), total_rounds
+
+
+# ---------------------------------------------------------------------------
+# Encode bit-pack (write-path phase 4)
+# ---------------------------------------------------------------------------
+
+DEFAULT_ENCODE_TILE_UNITS = 8
+
+
+@partial(jax.jit, static_argnames=("n_units_padded", "subseqs_per_seq",
+                                   "min_len", "tile_units", "interpret"))
+def _encode_bitpack_padded(symbols, enc_code, enc_len, n_units_padded: int,
+                           subseqs_per_seq: int, min_len: int,
+                           tile_units: int, interpret: bool):
+    """Traced body of :func:`encode_bitpack` (sizes fixed for jit)."""
+    symbols = symbols.astype(jnp.int32)
+    lens = jnp.asarray(enc_len)[symbols].astype(jnp.int32)
+    starts = jnp.cumsum(lens) - lens               # exclusive scan [N]
+    codes = jnp.asarray(enc_code)[symbols].astype(jnp.uint32)
+    total_bits = (starts[-1] + lens[-1]).astype(jnp.int32)
+    n = symbols.shape[0]
+
+    # --- tile -> symbol mapping (mirrors the decode kernels' prep) -----
+    tile_bits = tile_units * 32
+    n_tiles = n_units_padded // tile_units
+    # Lane budget: starts inside the tile are >= min_len apart, plus the
+    # (at most one) codeword crossing in from the left.
+    sym_max = tile_bits // max(min_len, 1) + 2
+    tile_base = jnp.arange(n_tiles, dtype=jnp.int32) * tile_bits
+    s0 = jnp.clip(jnp.searchsorted(starts, tile_base, side="right") - 1,
+                  0, n - 1)
+    lane = jnp.arange(sym_max, dtype=jnp.int32)
+    idx_raw = s0[:, None] + lane[None, :]
+    idx = jnp.clip(idx_raw, 0, n - 1)
+    st = starts[idx]
+    ln = lens[idx]
+    overlaps = ((idx_raw < n)
+                & (st < tile_base[:, None] + tile_bits)
+                & (st + ln > tile_base[:, None]))
+    tile_len = jnp.where(overlaps, ln, 0)
+    tile_start = st - tile_base[:, None]
+    units = _enc.pack_tiles(codes[idx], tile_len, tile_start,
+                            n_units_padded, tile_units, sym_max,
+                            interpret=interpret)
+
+    gaps, counts, seq_counts = he.stream_metadata(
+        starts, total_bits, n_units_padded, subseqs_per_seq)
+    return he.EncodedStream(
+        units=units, gaps=gaps, counts=counts, seq_counts=seq_counts,
+        total_bits=total_bits,
+        n_symbols=jnp.asarray(n, jnp.int32),
+        subseqs_per_seq=subseqs_per_seq)
+
+
+def encode_bitpack(symbols, enc_code, enc_len, total_bits: int,
+                   subseqs_per_seq: int, min_len: int = 1,
+                   tile_units: int = DEFAULT_ENCODE_TILE_UNITS,
+                   interpret: bool = True) -> he.EncodedStream:
+    """Kernel-backed Huffman encode: per-tile prefix-sum bit placement.
+
+    ``total_bits`` is the exact payload size (the ``EncoderPlan`` derives
+    it from the histogram, so the symbol array never round-trips to host);
+    ``min_len`` (the codebook's shortest codeword) bounds the static lane
+    budget.  Layout is bit-identical to ``core.huffman.encode.encode``.
+    """
+    symbols = jnp.asarray(symbols)
+    if symbols.shape[0] == 0:
+        return he.empty_stream(subseqs_per_seq)
+    n_units_padded = he.units_for_bits(total_bits, subseqs_per_seq)
+    return _encode_bitpack_padded(symbols, jnp.asarray(enc_code),
+                                  jnp.asarray(enc_len), n_units_padded,
+                                  subseqs_per_seq, min_len, tile_units,
+                                  interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.huffman import decode as hd
+from repro.core.huffman import encode as he
 from repro.core.huffman.bits import SUBSEQ_BITS
 from repro.core.sz import lorenzo as _lor
 
@@ -54,6 +55,16 @@ def selfsync_sync(units, dec_sym, dec_len, total_bits, n_subseq: int,
     _, counts = hd.subseq_scan(units, dec_sym, dec_len, start,
                                boundaries + SUBSEQ_BITS, total_bits, max_len)
     return start, counts
+
+
+def encode_bitpack(symbols, enc_code, enc_len, total_bits: int,
+                   subseqs_per_seq: int, min_len: int = 1):
+    """Oracle for ``ops.encode_bitpack``: the searchsorted bit
+    materialization of the core encoder (``min_len`` only sizes the
+    kernel's lane budget, so the oracle ignores it)."""
+    del min_len, total_bits
+    return he.encode(symbols, enc_code, enc_len,
+                     subseqs_per_seq=subseqs_per_seq)
 
 
 def histogram(x, nbins: int):

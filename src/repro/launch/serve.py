@@ -50,6 +50,10 @@ def main(argv=None):
     ap.add_argument("--kv-backend", default=None,
                     help="decode backend for KV restore ('ref', 'pallas'; "
                          "default: the CodecConfig default)")
+    ap.add_argument("--kv-encode-backend", default=None,
+                    help="encode backend for KV eviction/compression "
+                         "('ref' host path, 'jnp'/'pallas' device write "
+                         "path; default: the CodecConfig default)")
     ap.add_argument("--kv-offload", action="store_true",
                     help="page prompt KV blocks out to store archives and "
                          "demand-page them back before generation")
@@ -71,7 +75,9 @@ def main(argv=None):
     # decode method/backend, and the plan cache travel together.
     from repro.core import Codec, CodecConfig
     overrides = {k: v for k, v in (("eb", args.kv_eb),
-                                   ("backend", args.kv_backend))
+                                   ("backend", args.kv_backend),
+                                   ("encode_backend",
+                                    args.kv_encode_backend))
                  if v is not None}
     kv_codec = Codec(CodecConfig(**overrides))
 
@@ -142,6 +148,8 @@ def main(argv=None):
                 np.asarray(cache[name], np.float32) - snapshot[name]))))
         ratio = pager.ratio
         page_stats = dict(pager.stats)
+        page_stats["encode_dispatches"] = kv_codec.stats["encode_dispatches"]
+        page_stats["encode_fallbacks"] = kv_codec.stats["encode_fallbacks"]
         print(f"[serve] kv offload: {len(block_ids)} blocks x "
               f"{args.kv_block} toks -> {offload_dir} "
               f"({pager.stats['bytes_raw']/2**20:.2f} MiB raw, "

@@ -38,6 +38,7 @@ from repro.core.cache import (  # noqa: F401  (re-exports: digests moved to
     chunk_digest,               # core so the Codec's plan-cache keys and the
     codebook_digest,            # archive's are one namespace)
     crc32_arrays,
+    payload_crc,
 )
 
 MAGIC = b"SZTSTORE"

@@ -98,7 +98,11 @@ class ArchiveWriter:
         gaps = np.asarray(c.stream.gaps, np.uint8)
         opos = np.asarray(c.outlier_pos, np.int32)
         oval = np.asarray(c.outlier_val, np.int32)
+        # Integrity CRC covers the stored (padded) blobs exactly as written;
+        # the *digest* hashes only content (valid outlier prefix), so the
+        # plan-cache key is independent of pad width / producing backend.
         crc = F.crc32_arrays(units, gaps, opos, oval)
+        content_crc = F.payload_crc(units, gaps, opos, oval)
 
         units_ref = self._write_blob(units)
         total_bits = int(c.stream.total_bits)
@@ -124,7 +128,8 @@ class ArchiveWriter:
             max_abs=float(c.max_abs),
             cr_class=_overall_cr_class(n_symbols, total_bits),
             crc32=crc,
-            digest=F.chunk_digest(crc, total_bits, n_symbols, sps, cb_digest),
+            digest=F.chunk_digest(content_crc, total_bits, n_symbols, sps,
+                                  cb_digest),
         ))
 
     def add_array(self, name: str, arr, orig_dtype: "str | None" = None):

@@ -354,3 +354,49 @@ class TestErrorListings:
             hp.build_plan(c.stream, c.codebook, method="osmosis")
         for m in hp.VALID_PLAN_METHODS:
             assert m in str(ei.value)
+
+
+class TestEncodeBackendDigests:
+    """Content digests must not depend on which backend wrote the bytes,
+    nor on how wide the outlier side list happened to be padded."""
+
+    @staticmethod
+    def _lattice(n=5000, eb=0.0078125, seed=11):
+        k = np.random.default_rng(seed).integers(-400, 400, n).astype(np.int32)
+        return (k.astype(np.float32) * np.float32(2 * eb)), eb
+
+    def test_ref_and_jnp_share_digest_and_plans(self):
+        from repro.core.cache import compressed_digest
+
+        x, eb = self._lattice()
+        host = Codec(CodecConfig(eb=eb, mode="abs", encode_backend="ref"))
+        dev = Codec(CodecConfig(eb=eb, mode="abs", encode_backend="jnp"),
+                    plan_cache=host.plan_cache)
+        ch, cd = host.compress(x), dev.compress(x)
+        assert compressed_digest(ch) == compressed_digest(cd)
+        host.decompress(ch)             # builds + inserts the plan
+        host.backend.reset_stats()
+        host.plan_cache.reset_stats()
+        dev.decompress(cd)              # must be a cache hit, not a rebuild
+        assert dev.stats["plan_builds"] == 0
+        assert host.plan_cache.stats["plan_hits"] >= 1
+
+    def test_digest_ignores_outlier_padding(self):
+        """Regression: the digest hashes the valid outlier prefix, so a
+        writer that pads the side list wider produces the same digest."""
+        import dataclasses
+
+        from repro.core.cache import compressed_digest
+
+        x, eb = self._lattice()
+        x[::97] += 1000.0               # force some outliers
+        c = Codec(CodecConfig(eb=eb, mode="abs")).compress(x)
+        n_valid = int((np.asarray(c.outlier_pos) >= 0).sum())
+        assert n_valid > 0
+        pos = np.asarray(c.outlier_pos)
+        val = np.asarray(c.outlier_val)
+        wide = dataclasses.replace(
+            c,
+            outlier_pos=np.concatenate([pos, np.full(64, -1, pos.dtype)]),
+            outlier_val=np.concatenate([val, np.zeros(64, val.dtype)]))
+        assert compressed_digest(wide) == compressed_digest(c)

@@ -281,3 +281,164 @@ class TestDecompressBatch:
         for c, out in zip(cs, outs):
             ref = np.asarray(api.decompress(c, strategy="tuned"))
             assert np.asarray(out).tobytes() == ref.tobytes()
+
+
+class TestEncodeParityMatrix:
+    """Write-path twin of the decode matrix: every encode backend must emit
+    a byte-identical ``EncodedStream`` for the same symbols + codebook, so
+    decode never knows which backend wrote the bytes."""
+
+    FIELDS = ("units", "gaps", "counts", "seq_counts")
+
+    def _assert_streams_equal(self, a, b, ctx):
+        for f in self.FIELDS:
+            assert np.array_equal(np.asarray(getattr(a, f)),
+                                  np.asarray(getattr(b, f))), (ctx, f)
+        assert int(a.total_bits) == int(b.total_bits), ctx
+        assert int(a.n_symbols) == int(b.n_symbols), ctx
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("n_syms,max_len,sps", [
+        (4000, 12, 32),    # default framing
+        (4097, 12, 32),    # crosses a sequence boundary by one symbol
+        (129, 8, 4),       # short stream, small sequences
+        (777, 16, 32),     # deep codebook
+        (50, 4, 32),       # codebook shallower than a unit
+        (1, 12, 32),       # single symbol
+    ])
+    def test_pack_byte_identical(self, rng, backend, n_syms, max_len, sps):
+        vocab = min(1024, 1 << max_len)
+        book, syms, _ = make_book_and_stream(rng, n_syms=n_syms, vocab=vocab,
+                                             max_len=max_len,
+                                             subseqs_per_seq=sps)
+        freq = np.bincount(syms, minlength=vocab)
+        plan = pp.build_encoder_plan(freq, max_len=max_len,
+                                     subseqs_per_seq=sps, backend=backend)
+        got = pp.encode_with_plan(jnp.asarray(syms), plan, backend=backend)
+        want = pp.encode_with_plan(syms, plan, backend="ref")
+        self._assert_streams_equal(got, want, (backend, n_syms, max_len, sps))
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_single_used_symbol(self, backend):
+        from repro.core.huffman import codebook as cb
+
+        freq = np.zeros(16, np.int64)
+        freq[3] = 500
+        book = cb.build_codebook(freq, max_len=8)
+        syms = np.full(500, 3, np.uint16)
+        plan = pp.build_encoder_plan(freq, max_len=8, subseqs_per_seq=32,
+                                     backend=backend)
+        got = pp.encode_with_plan(jnp.asarray(syms), plan, backend=backend)
+        want = pp.encode_with_plan(syms, plan, backend="ref")
+        self._assert_streams_equal(got, want, backend)
+
+    @pytest.mark.parametrize("backend", ["ref", "jnp", "pallas"])
+    def test_empty_input(self, backend):
+        freq = np.zeros(16, np.int64)
+        freq[0] = 1   # codebook needs one symbol; the stream holds none
+        plan = pp.build_encoder_plan(freq, max_len=8, subseqs_per_seq=32,
+                                     backend=backend)
+        plan = pp.EncoderPlan(codebook=plan.codebook, enc_code=plan.enc_code,
+                              enc_len=plan.enc_len, total_bits=0,
+                              subseqs_per_seq=32)
+        got = pp.encode_with_plan(jnp.zeros((0,), jnp.uint16), plan,
+                                  backend=backend)
+        assert int(got.n_symbols) == 0 and int(got.total_bits) == 0
+        assert np.all(np.asarray(got.units) == 0)
+
+    def test_stats_counters(self, rng):
+        book, syms, _ = make_book_and_stream(rng, n_syms=300)
+        freq = np.bincount(syms, minlength=1024)
+        be = pp.get_encode_backend("jnp")
+        be.reset_stats()
+        plan = pp.build_encoder_plan(freq, max_len=12, subseqs_per_seq=32,
+                                     backend="jnp")
+        pp.encode_with_plan(jnp.asarray(syms), plan, backend="jnp")
+        pp.encode_with_plan(jnp.asarray(syms), plan, backend="jnp")
+        assert be.stats["encoder_plan_builds"] == 1
+        assert be.stats["encode_dispatches"] == 2
+        assert be.stats["encode_fallbacks"] == 0
+
+    def test_unknown_encode_backend(self):
+        with pytest.raises(ValueError, match="available"):
+            pp.get_encode_backend("no_such_encoder")
+
+
+class TestDeviceCompressParity:
+    """End-to-end ``compress(encode_backend=...)``: device x decode matrix."""
+
+    @staticmethod
+    def _lattice(rng, n=6000, eb=0.0078125):
+        # Values exactly on the 2*eb lattice: the f32 in-graph quantizer and
+        # the f64 host prequantizer agree bit-for-bit, so the full payload
+        # (not just the decode) must be byte-identical.
+        k = rng.integers(-400, 400, size=n).astype(np.int32)
+        return (k.astype(np.float32) * np.float32(2 * eb)), eb
+
+    @pytest.mark.parametrize("encode_backend", ["jnp", "pallas"])
+    def test_lattice_byte_identical(self, rng, encode_backend):
+        from repro.core.sz import compressor as C
+
+        x, eb = self._lattice(rng)
+        ref = C.compress(x, eb=eb, mode="abs", encode_backend="ref")
+        dev = C.compress(x, eb=eb, mode="abs", encode_backend=encode_backend)
+        assert np.array_equal(np.asarray(ref.stream.units),
+                              np.asarray(dev.stream.units))
+        assert np.array_equal(np.asarray(ref.outlier_pos),
+                              np.asarray(dev.outlier_pos))
+        assert np.array_equal(np.asarray(ref.outlier_val),
+                              np.asarray(dev.outlier_val))
+
+    @pytest.mark.parametrize("encode_backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("decode_backend", ["ref", "pallas"])
+    @pytest.mark.parametrize("mode", ["rel", "abs"])
+    def test_roundtrip_within_bound(self, rng, encode_backend,
+                                    decode_backend, mode):
+        from repro.core.sz import compressor as C
+
+        x = rng.normal(size=(61, 47)).astype(np.float32)
+        c = C.compress(x, eb=1e-3, mode=mode, encode_backend=encode_backend)
+        y = np.asarray(C.decompress(c, backend=decode_backend))
+        assert np.max(np.abs(y - x)) <= c.eb_effective
+
+    @pytest.mark.parametrize("n", [31, 4096, 4097, 8191])
+    def test_tail_padding_sizes(self, rng, n):
+        from repro.core.sz import compressor as C
+
+        x, eb = TestDeviceCompressParity._lattice(rng, n=n)
+        ref = C.compress(x, eb=eb, mode="abs", encode_backend="ref")
+        dev = C.compress(x, eb=eb, mode="abs", encode_backend="jnp")
+        assert np.array_equal(np.asarray(ref.stream.units),
+                              np.asarray(dev.stream.units)), n
+
+    def test_forced_outliers_at_radius(self, rng):
+        from repro.core.sz import compressor as C
+
+        x = (rng.normal(size=3000) * 100).astype(np.float32)
+        x[::11] += 2000.0   # residuals far past the radius
+        ref = C.compress(x, eb=0.5, mode="abs", encode_backend="ref")
+        dev = C.compress(x, eb=0.5, mode="abs", encode_backend="jnp")
+        assert int((np.asarray(ref.outlier_pos) >= 0).sum()) > 0
+        assert np.array_equal(np.asarray(ref.outlier_pos),
+                              np.asarray(dev.outlier_pos))
+        assert np.array_equal(np.asarray(ref.outlier_val),
+                              np.asarray(dev.outlier_val))
+        y = np.asarray(C.decompress(dev))
+        assert np.max(np.abs(y - x)) <= dev.eb_effective
+
+    def test_non_f32_falls_back_counted(self, rng):
+        from repro.core.sz import compressor as C
+
+        be = pp.get_encode_backend("jnp")
+        be.reset_stats()
+        x = rng.normal(size=400).astype(np.float16)
+        c = C.compress(x, eb=1e-2, mode="abs", encode_backend="jnp")
+        assert be.stats["encode_fallbacks"] == 1
+        assert be.stats["encode_dispatches"] == 0   # served by "ref"
+        y = np.asarray(C.decompress(c))
+        assert y.dtype == np.float16   # fallback preserves the input dtype
+        # decompress rounds the reconstruction back to f16, which can add up
+        # to half an f16 ulp on top of the error bound
+        slack = 0.5 * np.max(np.abs(np.spacing(x.astype(np.float16))))
+        err = np.max(np.abs(y.astype(np.float64) - x.astype(np.float64)))
+        assert err <= c.eb_effective + slack
