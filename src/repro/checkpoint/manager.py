@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codec import Codec, default_codec
+from repro.core.huffman import pipeline as hp
 from repro.core.sz.compressor import Compressed
 from repro.store import Archive, ArchiveWriter, StoreError
 
@@ -40,6 +41,26 @@ MANIFEST_VERSION = 2
 
 class CheckpointIntegrityError(RuntimeError):
     """A checkpoint entry is missing, truncated, or fails its checksum."""
+
+
+def _write_json_atomic(path: str, obj) -> None:
+    """Durable atomic JSON write: temp file + fsync + rename + dir fsync.
+
+    A crash at any point leaves either the old file or the new one, never
+    a torn half-write -- and the rename is not published before the bytes
+    are durable, so power loss cannot surface an empty manifest either.
+    """
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
 
 
 def _flatten(tree):
@@ -158,7 +179,12 @@ class CheckpointManager:
                                 codec=self.codec)
                         writer.add(fname, leaf,
                                    orig_dtype=str(np.dtype(leaf.dtype)))
-                        manifest["entries"][fname] = {"kind": "sz"}
+                        # shape/dtype recorded so a zero_fill restore can
+                        # size the substitute even when the archive is gone.
+                        manifest["entries"][fname] = {
+                            "kind": "sz",
+                            "shape": [int(s) for s in leaf.shape],
+                            "dtype": str(np.dtype(leaf.dtype))}
                     else:
                         path = os.path.join(tmp, fname + ".npy")
                         with open(path, "wb") as f:
@@ -166,6 +192,7 @@ class CheckpointManager:
                             np.save(tee, leaf, allow_pickle=False)
                         manifest["entries"][fname] = {
                             "kind": "raw", "dtype": str(leaf.dtype),
+                            "shape": [int(s) for s in leaf.shape],
                             "checksum": tee.crc}
         except BaseException:
             if writer is not None:
@@ -175,8 +202,7 @@ class CheckpointManager:
             for fname, crc in writer.checksums().items():
                 manifest["entries"][fname]["checksum"] = crc
             writer.close()
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        _write_json_atomic(os.path.join(tmp, "manifest.json"), manifest)
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)
 
@@ -187,40 +213,115 @@ class CheckpointManager:
 
     # -- read ---------------------------------------------------------------
 
+    def _steps(self) -> list:
+        steps = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    steps.append(int(d.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(steps)
+
     def latest_step(self):
-        steps = [int(d.split("_")[1]) for d in os.listdir(self.dir)
-                 if d.startswith("step_") and not d.endswith(".tmp")]
+        steps = self._steps()
         return max(steps) if steps else None
 
-    def _restore_archive(self, d: str, step: int, manifest) -> dict:
+    def _load_manifest(self, d: str, step: int) -> dict:
+        """Parse a step's manifest; every failure mode -- missing, torn
+        half-write, valid-JSON-wrong-shape -- is the named
+        ``CheckpointIntegrityError``, never a raw parse error."""
+        mpath = os.path.join(d, "manifest.json")
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+        except FileNotFoundError as e:
+            raise CheckpointIntegrityError(
+                f"step {step}: manifest.json is missing") from e
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+            raise CheckpointIntegrityError(
+                f"step {step}: manifest.json is torn or unreadable: "
+                f"{e}") from e
+        entries = manifest.get("entries") if isinstance(manifest, dict) \
+            else None
+        if not isinstance(entries, dict) or not all(
+                isinstance(m, dict) and "kind" in m
+                for m in entries.values()):
+            raise CheckpointIntegrityError(
+                f"step {step}: manifest.json is structurally invalid")
+        version = manifest.get("version", 1)
+        if version > MANIFEST_VERSION:
+            raise CheckpointIntegrityError(
+                f"step {step}: manifest version {version} is newer than this "
+                f"reader (supports <= {MANIFEST_VERSION})")
+        if version < MANIFEST_VERSION and any(
+                m["kind"] == "sz" for m in entries.values()):
+            raise CheckpointIntegrityError(
+                f"step {step}: checkpoint uses the pre-store manifest "
+                f"version {version} (loose .szblob.npz shards); re-save it "
+                f"with this manager's writer -- it is not corrupt")
+        return manifest
+
+    def _restore_archive(self, d: str, step: int, manifest, pol,
+                         quarantined: dict) -> dict:
         """Decode every compressed entry of a step's archive (integrity-
-        checked, plan-cached, I/O overlapped with decode)."""
+        checked, plan-cached, I/O overlapped with decode).
+
+        Under a non-raise policy, failures quarantine entries (recorded in
+        ``quarantined`` as name -> reason) instead of aborting: a corrupt
+        chunk loses that entry, a corrupt/missing archive loses all of
+        them, and everything else restores.
+        """
         sz_entries = {fname: meta for fname, meta in
                       manifest["entries"].items() if meta["kind"] == "sz"}
         if not sz_entries:
             return {}
         apath = os.path.join(d, ARCHIVE_NAME)
+
+        def lose_all(reason: str) -> dict:
+            if pol.on_error == "raise":
+                raise CheckpointIntegrityError(f"step {step}: {reason}")
+            for fname in sz_entries:
+                quarantined[fname] = reason
+            return {}
+
         if not os.path.exists(apath):
-            raise CheckpointIntegrityError(
-                f"step {step}: manifest lists {len(sz_entries)} compressed "
-                f"entries but {ARCHIVE_NAME} is missing")
+            return lose_all(f"manifest lists {len(sz_entries)} compressed "
+                            f"entries but {ARCHIVE_NAME} is missing")
         try:
-            with Archive(apath, codec=self._read_codec) as ar:
-                for fname, meta in sz_entries.items():
-                    if fname not in ar:
-                        raise CheckpointIntegrityError(
-                            f"step {step}: entry {fname!r} missing from "
-                            f"{ARCHIVE_NAME}")
-                    want = meta.get("checksum")
-                    if want is not None and ar.chunk(fname).crc32 != want:
-                        raise CheckpointIntegrityError(
-                            f"step {step}: entry {fname!r} checksum in "
-                            f"manifest.json disagrees with {ARCHIVE_NAME}")
-                return ar.read_all(list(sz_entries))
-        except StoreError as e:
-            raise CheckpointIntegrityError(
-                f"step {step}: {ARCHIVE_NAME} is corrupt or truncated: "
-                f"{e}") from e
+            ar = Archive(apath, codec=self._read_codec)
+        except (StoreError, OSError) as e:
+            return lose_all(f"{ARCHIVE_NAME} is corrupt or truncated: {e}")
+        with ar:
+            want = []
+            for fname, meta in sz_entries.items():
+                if fname not in ar:
+                    reason = f"entry missing from {ARCHIVE_NAME}"
+                elif (meta.get("checksum") is not None
+                        and ar.chunk(fname).crc32 != meta["checksum"]):
+                    reason = (f"entry checksum in manifest.json disagrees "
+                              f"with {ARCHIVE_NAME}")
+                else:
+                    want.append(fname)
+                    continue
+                if pol.on_error == "raise":
+                    raise CheckpointIntegrityError(
+                        f"step {step}: {fname!r}: {reason}")
+                quarantined[fname] = reason
+
+            def on_error(name, exc):
+                quarantined[name] = f"{type(exc).__name__}: {exc}"
+
+            try:
+                if pol.on_error == "raise":
+                    return ar.read_all(want, policy="raise")
+                # Salvage: skip failed chunks here; restore() substitutes
+                # zeros for quarantined entries under "zero_fill".
+                return ar.read_all(want, policy="skip", on_error=on_error)
+            except (StoreError, hp.DecodeGuardError) as e:
+                raise CheckpointIntegrityError(
+                    f"step {step}: {ARCHIVE_NAME} is corrupt or truncated: "
+                    f"{e}") from e
 
     def _restore_raw(self, d: str, step: int, fname: str, meta):
         path = os.path.join(d, fname + ".npy")
@@ -234,38 +335,89 @@ class CheckpointManager:
                 f"(corrupt or truncated file)")
         try:
             return jnp.asarray(np.load(path, allow_pickle=False))
-        except ValueError as e:
+        except (ValueError, OSError, EOFError) as e:
             raise CheckpointIntegrityError(
                 f"step {step}: raw shard {fname!r} is unreadable: {e}") from e
 
-    def restore(self, step: int | None = None):
-        step = step if step is not None else self.latest_step()
-        if step is None:
+    @staticmethod
+    def _zero_fill(meta: dict, pol):
+        """Zeros of an entry's recorded shape/dtype, or None when the
+        policy isn't ``zero_fill`` / the manifest predates shape records."""
+        if pol.on_error != "zero_fill":
             return None
-        d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        version = manifest.get("version", 1)
-        if version > MANIFEST_VERSION:
-            raise CheckpointIntegrityError(
-                f"step {step}: manifest version {version} is newer than this "
-                f"reader (supports <= {MANIFEST_VERSION})")
-        if version < MANIFEST_VERSION and any(
-                m["kind"] == "sz" for m in manifest["entries"].values()):
-            raise CheckpointIntegrityError(
-                f"step {step}: checkpoint uses the pre-store manifest "
-                f"version {version} (loose .szblob.npz shards); re-save it "
-                f"with this manager's writer -- it is not corrupt")
+        shape, dtype = meta.get("shape"), meta.get("dtype")
+        if shape is None or dtype is None:
+            return None
+        return jnp.zeros(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+    def restore(self, step: int | None = None, policy=None):
+        """Restore a step (default: newest).
+
+        ``policy`` (a string or ``RecoveryPolicy``; default: the codec's
+        ``recovery`` config, i.e. ``"raise"``) selects salvage behaviour on
+        corruption:
+
+        * ``"raise"`` -- any integrity failure raises the named
+          ``CheckpointIntegrityError`` (the historical behaviour).
+        * ``"skip"`` -- intact entries restore; failing ones are omitted
+          and reported in the result's ``"quarantined"`` dict
+          (name -> reason).  When the *newest* step's manifest is torn and
+          no explicit ``step`` was requested, restore falls back to the
+          newest intact step (skipped steps listed in ``"fallback_from"``).
+        * ``"zero_fill"`` -- like ``"skip"``, but quarantined entries are
+          replaced by zeros of their recorded shape/dtype so the restored
+          tree keeps its structure.
+        """
+        pol = self._read_codec.recovery_policy(policy)
+        fallback_from: list = []
+        if step is None:
+            manifest = None
+            for s in reversed(self._steps()):
+                d = os.path.join(self.dir, f"step_{s:08d}")
+                try:
+                    manifest = self._load_manifest(d, s)
+                    step = s
+                    break
+                except CheckpointIntegrityError as e:
+                    if pol.on_error == "raise":
+                        raise
+                    fallback_from.append({"step": s, "reason": str(e)})
+            if manifest is None:
+                return None
+        else:
+            d = os.path.join(self.dir, f"step_{step:08d}")
+            manifest = self._load_manifest(d, step)
         trees: dict = {"params": {}, "opt": {}}
-        sz_restored = self._restore_archive(d, step, manifest)
+        quarantined: dict = {}
+        sz_restored = self._restore_archive(d, step, manifest, pol,
+                                            quarantined)
         for fname, meta in manifest["entries"].items():
-            tname, key = fname.split(".", 1)
+            tname, _, key = fname.partition(".")
+            if not key:
+                if pol.on_error == "raise":
+                    raise CheckpointIntegrityError(
+                        f"step {step}: malformed entry name {fname!r}")
+                quarantined[fname] = "malformed entry name"
+                continue
             if meta["kind"] == "sz":
-                arr = sz_restored[fname]
+                arr = sz_restored.get(fname)
+                if arr is None:          # quarantined by _restore_archive
+                    arr = self._zero_fill(meta, pol)
+                    if arr is None:
+                        continue
             else:
-                arr = self._restore_raw(d, step, fname, meta)
+                try:
+                    arr = self._restore_raw(d, step, fname, meta)
+                except CheckpointIntegrityError as e:
+                    if pol.on_error == "raise":
+                        raise
+                    quarantined[fname] = str(e)
+                    arr = self._zero_fill(meta, pol)
+                    if arr is None:
+                        continue
             trees.setdefault(tname, {})[key] = arr
         params = _unflatten(trees["params"])
         opt = _unflatten(trees["opt"]) if trees.get("opt") else None
         return {"step": step, "params": params, "opt": opt,
-                "extra": manifest.get("extra", {})}
+                "extra": manifest.get("extra", {}),
+                "quarantined": quarantined, "fallback_from": fallback_from}

@@ -43,6 +43,7 @@ from repro.core.huffman import encode as he
 from repro.core.huffman import pipeline as hp
 from repro.core.sz import compressor, lorenzo
 from repro.core.sz.compressor import Compressed
+from repro.runtime import fault_tolerance as ft
 
 VALID_MODES = ("rel", "abs")
 VALID_METHODS = ("gap", "selfsync", "naive_ref")
@@ -95,6 +96,17 @@ class CodecConfig:
 
     Session side:
       plan_cache_size  LRU bound of the Codec's digest-keyed plan cache
+
+    Recovery side (what consumers do when a read fails; see
+    ``runtime/fault_tolerance.py:RecoveryPolicy`` and docs/robustness.md):
+      recovery         "raise" (default) | "skip" | "zero_fill" -- applied
+                       by ``Archive.iter_decode``, ``CheckpointManager.
+                       restore`` (salvage mode) and ``KVPager.page_in`` to
+                       persistent corruption; per-call ``policy=`` overrides
+                       win over this default.
+      io_retries       transient-IO retry count for store reads (``OSError``
+                       only; corruption is never retried)
+      io_backoff       initial backoff seconds between retries (doubles)
     """
 
     eb: float = DEFAULT_EB
@@ -110,6 +122,9 @@ class CodecConfig:
     tile_syms: int = hp.DEFAULT_TILE_SYMS
     fused: bool = False
     plan_cache_size: int = 4096
+    recovery: str = "raise"
+    io_retries: int = 2
+    io_backoff: float = 0.05
 
     def __post_init__(self):
         if not (self.eb > 0):
@@ -146,6 +161,15 @@ class CodecConfig:
         if self.plan_cache_size < 0:
             raise ValueError("plan_cache_size must be >= 0, got "
                              f"{self.plan_cache_size}")
+        if self.recovery not in ft.VALID_RECOVERY:
+            raise ValueError(f"unknown recovery {self.recovery!r}; valid "
+                             f"policies: {ft.VALID_RECOVERY}")
+        if self.io_retries < 0:
+            raise ValueError(f"io_retries must be >= 0, got "
+                             f"{self.io_retries}")
+        if self.io_backoff < 0:
+            raise ValueError(f"io_backoff must be >= 0, got "
+                             f"{self.io_backoff}")
 
     def replace(self, **changes) -> "CodecConfig":
         return dataclasses.replace(self, **changes)
@@ -194,6 +218,11 @@ class Codec:
         self.backend.reset_stats()
         self.encode_backend.reset_stats()
         self.plan_cache.reset_stats()
+
+    def recovery_policy(self, policy=None) -> ft.RecoveryPolicy:
+        """This codec's ``RecoveryPolicy``; ``policy`` (a string or a
+        ``RecoveryPolicy``) overrides the config's ``recovery`` default."""
+        return ft.RecoveryPolicy.resolve(policy, self.config)
 
     # -- single tensors ------------------------------------------------------
 

@@ -183,6 +183,55 @@ def build_codebook(freq: np.ndarray, max_len: int = DEFAULT_MAX_LEN) -> Codebook
     )
 
 
+def validate_codebook(codebook, max_len: "int | None" = None) -> list:
+    """Integrity problems of a (possibly corrupt) codebook, as strings.
+
+    Checks the canonical-code invariants that the decode LUTs rely on:
+    every used codeword length lies in ``[1, max_len]``, the lengths
+    satisfy the Kraft inequality (``sum 2**-len <= 1`` -- a corrupted
+    length table that overfills the code space makes the LUT decode
+    ambiguous garbage), and the decode tables have the ``2**max_len``
+    shape with entries bounded by ``max_len``.  Returns ``[]`` for a
+    healthy codebook; ``pipeline.build_plan`` raises ``DecodeGuardError``
+    on anything else.  Works on ``Codebook`` and on LUT-only views
+    (encoder tables are checked only when present).
+    """
+    problems: list = []
+    L = int(max_len if max_len is not None else codebook.max_len)
+    if not (1 <= L <= 24):
+        return [f"max_len {L} outside [1, 24]"]
+
+    enc_len = getattr(codebook, "enc_len", None)
+    if enc_len is not None:
+        lens = np.asarray(enc_len, dtype=np.int64)
+        used = lens[lens > 0]
+        if used.size:
+            if int(used.max()) > L:
+                problems.append(
+                    f"codeword length {int(used.max())} exceeds "
+                    f"max_len={L}")
+            else:
+                kraft = float(np.sum(2.0 ** -used.astype(np.float64)))
+                if kraft > 1.0 + 1e-9:
+                    problems.append(
+                        f"Kraft inequality violated (sum 2^-len = "
+                        f"{kraft:.6f} > 1)")
+        elif lens.size:
+            problems.append("no symbol has a nonzero codeword length")
+
+    size = 1 << L
+    for name in ("dec_sym", "dec_len"):
+        tab = getattr(codebook, name, None)
+        if tab is not None and tab.shape != (size,):
+            problems.append(f"{name} shape {tuple(tab.shape)} != ({size},)")
+    dec_len = getattr(codebook, "dec_len", None)
+    if dec_len is not None and dec_len.shape == (size,) and size:
+        dmax = int(np.asarray(dec_len, dtype=np.int64).max())
+        if dmax > L:
+            problems.append(f"decode-LUT length {dmax} exceeds max_len={L}")
+    return problems
+
+
 def expected_bits_per_symbol(freq: np.ndarray, lengths: np.ndarray) -> float:
     freq = np.asarray(freq, dtype=np.float64)
     total = freq.sum()

@@ -96,6 +96,9 @@ def subseq_scan(units, dec_sym, dec_len, start_bits, end_bits, total_bits,
         win = peek(units, pos, max_len)
         if lut_base is not None:
             win = win + lut_base
+        # Guard: keep the LUT gather in bounds even if a malformed stream
+        # or merged-LUT offset produced an out-of-range window index.
+        win = jnp.clip(win, 0, dec_sym.shape[0] - 1)
         sym = dec_sym[win]
         length = dec_len[win].astype(jnp.int32)
         if collect:

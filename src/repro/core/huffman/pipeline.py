@@ -37,9 +37,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.huffman import codebook as _cb
 from repro.core.huffman import decode as hd
 from repro.core.huffman.bits import SUBSEQ_BITS, UNIT_BITS
 from repro.core.huffman.encode import EncodedStream
+
+
+class DecodeGuardError(RuntimeError):
+    """A decoder-level integrity guard tripped on malformed input.
+
+    Raised by ``build_plan`` (corrupt codebook: Kraft violation, lengths
+    over ``max_len``, bad LUT shapes) and by the symbol-count guard in
+    ``sz.compressor.decompress`` when a CRC-valid-but-malformed stream
+    would decode the wrong number of symbols.  Every trip -- including
+    non-raising containment such as gap clamping -- is counted in
+    ``backend.stats["decode_guard_trips"]``.
+    """
 
 # Paper Alg. 2 constants: class c in {1..T_high} covers CR in (c-1, c];
 # class T_high+1 covers (T_high, 16].
@@ -207,7 +220,8 @@ class DecodeBackend:
         default_factory=lambda: {"decode_write_dispatches": 0,
                                  "plan_builds": 0,
                                  "fused_dispatches": 0,
-                                 "fused_fallbacks": 0})
+                                 "fused_fallbacks": 0,
+                                 "decode_guard_trips": 0})
 
     @property
     def supports_fused(self) -> bool:
@@ -665,6 +679,11 @@ def build_plan(stream: EncodedStream, codebook, method: str = "gap",
     """
     be = get_backend(backend)
     be.stats["plan_builds"] += 1
+    problems = _cb.validate_codebook(codebook)
+    if problems:
+        be.stats["decode_guard_trips"] += 1
+        raise DecodeGuardError("corrupt codebook rejected at build_plan: "
+                               + "; ".join(problems))
     luts = _as_luts(codebook)
     units = jnp.asarray(stream.units)
     n_subseq = stream.n_subseq
@@ -673,7 +692,17 @@ def build_plan(stream: EncodedStream, codebook, method: str = "gap",
     ends = boundaries + SUBSEQ_BITS
 
     if method == "gap":
-        starts = boundaries + stream.gaps.astype(jnp.int32)
+        # A valid gap never exceeds SUBSEQ_BITS (the encoder stores the
+        # offset of the first codeword start inside a 128-bit window, or
+        # the in-window distance to end-of-stream).  Clamp anything larger
+        # -- a corrupt gap array -- so sync starts stay inside the window
+        # their counts were computed for, and count the containment.
+        gaps = stream.gaps.astype(jnp.int32)
+        if stream.gaps.size and int(np.asarray(stream.gaps).max(
+                initial=0)) > SUBSEQ_BITS:
+            be.stats["decode_guard_trips"] += 1
+            gaps = jnp.minimum(gaps, SUBSEQ_BITS)
+        starts = boundaries + gaps
         counts = be.count_fn(units, luts.dec_sym, luts.dec_len, starts, ends,
                              stream.total_bits, luts.max_len)
     elif method == "selfsync":

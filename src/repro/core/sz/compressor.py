@@ -241,6 +241,28 @@ def fused_unsupported_reason(c: Compressed, backend, method: str,
     return None
 
 
+def _guard_symbol_count(c: Compressed, plan, backend) -> None:
+    """Decoder guard: a plan must decode exactly ``c.n_symbols`` symbols.
+
+    The per-subsequence counts of a corrupt (CRC-valid-but-malformed in
+    memory) stream can disagree with the tensor's recorded shape; decoding
+    would then scatter a wrong number of symbols into plausible-looking
+    output.  Detect it here -- where ``n_symbols == prod(shape)`` is an
+    invariant -- rather than in ``pipeline.decode``, whose callers may
+    legitimately decode a prefix.  Trips count in
+    ``stats["decode_guard_trips"]`` and raise ``DecodeGuardError``.
+    """
+    if plan is None:
+        return
+    total = int(np.asarray(plan.seq_counts).sum())
+    if total != c.n_symbols:
+        hp.get_backend(backend).stats["decode_guard_trips"] += 1
+        raise hp.DecodeGuardError(
+            f"symbol-count mismatch: plan decodes {total} symbols but the "
+            f"tensor records n_symbols={c.n_symbols} (shape "
+            f"{tuple(c.shape)}) -- corrupt stream metadata")
+
+
 def decompress(
     c: Compressed,
     method: str = "gap",
@@ -273,6 +295,11 @@ def decompress(
     """
     book = c.codebook
     n = c.n_symbols
+
+    if plan is None and method in hp.VALID_PLAN_METHODS:
+        plan = hp.build_plan(c.stream, book, method=method, backend=backend,
+                             t_high=t_high)
+    _guard_symbol_count(c, plan, backend)
 
     if fused:
         reason = fused_unsupported_reason(c, backend, method, strategy)
@@ -326,6 +353,12 @@ def decompress_batch(
     """
     if not cs:
         return []
+    if plans is None and method in hp.VALID_PLAN_METHODS:
+        plans = [hp.build_plan(c.stream, c.codebook, method=method,
+                               backend=backend, t_high=t_high) for c in cs]
+    if plans is not None:
+        for c, p in zip(cs, plans):
+            _guard_symbol_count(c, p, backend)
     if fused:
         outs: list = [None] * len(cs)
         rest = []

@@ -65,6 +65,10 @@ def decode_window(rows, start, end, dec_sym, dec_len, max_len: int,
         win = peek_rows(rows, pos, max_len)
         if lut_base is not None:
             win = win + lut_base
+        # Guard: clamp the LUT gather -- inside a compiled Pallas kernel an
+        # out-of-bounds gather is undefined behaviour, and a corrupt
+        # merged-LUT offset must not escape the table.
+        win = jnp.clip(win, 0, dec_sym.shape[0] - 1)
         sym = dec_sym[win]
         length = dec_len[win].astype(jnp.int32)
         if collect:
@@ -98,7 +102,8 @@ def decode_window_fixed(rows, start, end, dec_sym, dec_len, max_len: int):
     def body(_k, state):
         pos, count = state
         active = pos < end
-        win = peek_rows(rows, pos, max_len)
+        win = jnp.clip(peek_rows(rows, pos, max_len), 0,
+                       dec_len.shape[0] - 1)
         length = dec_len[win].astype(jnp.int32)
         count = jnp.where(active, count + 1, count)
         pos = jnp.where(active, pos + jnp.maximum(length, 1), pos)

@@ -62,6 +62,13 @@ def main(argv=None):
     ap.add_argument("--kv-offload-dir", default=None,
                     help="directory for KV block archives "
                          "(default: a temp dir)")
+    ap.add_argument("--kv-recovery", default="raise",
+                    choices=["raise", "skip", "zero_fill"],
+                    help="recovery policy for lost/corrupt KV blocks: "
+                         "'raise' aborts on PageLostError; 'skip'/"
+                         "'zero_fill' keep serving degraded -- the lost "
+                         "block's span stays zeroed and "
+                         "stats['pages_lost'] counts it")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -77,7 +84,8 @@ def main(argv=None):
     overrides = {k: v for k, v in (("eb", args.kv_eb),
                                    ("backend", args.kv_backend),
                                    ("encode_backend",
-                                    args.kv_encode_backend))
+                                    args.kv_encode_backend),
+                                   ("recovery", args.kv_recovery))
                  if v is not None}
     kv_codec = Codec(CodecConfig(**overrides))
 
@@ -138,11 +146,19 @@ def main(argv=None):
                                           keys=keys)
         t_out = time.time() - t0
         t0 = time.time()
-        cache = page_in_blocks(cache, pager, block_ids)
+        # Under a non-raise recovery policy a lost block (missing/corrupt
+        # archive -> PageLostError, counted in stats["pages_lost"]) keeps
+        # its span zeroed and serving continues degraded.
+        lost: list = []
+        on_lost = (None if args.kv_recovery == "raise"
+                   else lambda bid, e: lost.append((bid, e)))
+        cache = page_in_blocks(cache, pager, block_ids, on_lost=on_lost)
         t_in = time.time() - t0
+        lost_ids = {bid for bid, _ in lost}
         paged = set()
         for bid in block_ids:
-            paged |= set(pager.block_meta(bid)["names"])
+            if bid not in lost_ids:
+                paged |= set(pager.block_meta(bid)["names"])
         for name in paged:
             kv_err = max(kv_err, float(np.max(np.abs(
                 np.asarray(cache[name], np.float32) - snapshot[name]))))
@@ -156,6 +172,10 @@ def main(argv=None):
               f"{pager.stats['bytes_compressed']/2**20:.2f} MiB stored, "
               f"ratio {ratio:.2f}x); page-out {t_out:.2f}s, "
               f"page-in {t_in:.2f}s, max err {kv_err:.2e}")
+        if lost:
+            print(f"[serve] kv paging DEGRADED: {len(lost)} block(s) lost "
+                  f"(pages_lost={pager.stats['pages_lost']}); their token "
+                  f"spans stay zeroed")
 
     # --- optional cache compress/restore round trip ------------------------
     if args.compress_kv:

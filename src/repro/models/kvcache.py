@@ -98,9 +98,24 @@ def offload_prefix(cache: dict, pager: KVPager, n_tokens: int,
     return cache, ids
 
 
-def page_in_blocks(cache: dict, pager: KVPager, block_ids) -> dict:
+def page_in_blocks(cache: dict, pager: KVPager, block_ids,
+                   on_lost=None) -> dict:
     """Restore offloaded blocks into the cache (demand paging: call with
-    whatever blocks the next attention window needs)."""
+    whatever blocks the next attention window needs).
+
+    ``on_lost(block_id, exc)`` turns a lost block (``PageLostError``:
+    missing/corrupt archive -- already evicted and counted in
+    ``pager.stats["pages_lost"]``) into degraded service: the callback is
+    invoked, the block's span stays zeroed, and paging continues with the
+    remaining blocks.  Without the callback the named error propagates.
+    """
+    from repro.store import PageLostError
+
     for bid in block_ids:
-        cache = pager.page_in(cache, bid)
+        try:
+            cache = pager.page_in(cache, bid)
+        except PageLostError as e:
+            if on_lost is None:
+                raise
+            on_lost(bid, e)
     return cache

@@ -14,12 +14,95 @@ mechanism + simulation hooks (exercised by tests/test_fault_tolerance.py):
     largest feasible size and return the new DataConfig sharding; parameters
     are FSDP-sharded over ("pod","data") so the restore path is a standard
     checkpoint load with the new mesh (checkpoints store full arrays).
+  * RecoveryPolicy / with_retries -- what a consumer does when a read fails:
+    transient IO errors are retried with exponential backoff, persistent
+    corruption is raised / skipped / zero-filled per ``on_error``.  The store
+    reader, checkpoint restore, and KV pager all resolve their policy from
+    the codec config (``CodecConfig.recovery`` / ``io_retries`` /
+    ``io_backoff``) with per-call overrides.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+
+VALID_RECOVERY = ("raise", "skip", "zero_fill")
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """What a store/checkpoint/paging consumer does when a read fails.
+
+    ``on_error`` applies to *persistent* failures (corruption, truncation,
+    decode-guard trips): ``"raise"`` propagates the named error, ``"skip"``
+    omits the failed entry (callers report it as quarantined), and
+    ``"zero_fill"`` substitutes zeros of the recorded shape/dtype.
+
+    ``retries``/``backoff``/``multiplier`` apply to *transient* IO errors
+    (``OSError``): the read is retried with exponential backoff before the
+    failure is treated as persistent.
+    """
+
+    on_error: str = "raise"
+    retries: int = 0
+    backoff: float = 0.05
+    multiplier: float = 2.0
+
+    def __post_init__(self):
+        if self.on_error not in VALID_RECOVERY:
+            raise ValueError(
+                f"on_error must be one of {VALID_RECOVERY}, "
+                f"got {self.on_error!r}")
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {self.retries}")
+        if self.backoff < 0:
+            raise ValueError(f"backoff must be >= 0, got {self.backoff}")
+
+    @classmethod
+    def resolve(cls, policy, config=None):
+        """Normalise ``policy`` (None | str | RecoveryPolicy) to an instance.
+
+        ``None`` inherits from ``config`` (a ``CodecConfig``-like object with
+        ``recovery``/``io_retries``/``io_backoff``) when given, else the
+        defaults.  A bare string sets ``on_error`` and keeps the config's
+        retry settings.
+        """
+        if isinstance(policy, cls):
+            return policy
+        kw = {}
+        if config is not None:
+            kw = dict(on_error=getattr(config, "recovery", "raise"),
+                      retries=getattr(config, "io_retries", 0),
+                      backoff=getattr(config, "io_backoff", 0.05))
+        if policy is not None:
+            kw["on_error"] = policy
+        return cls(**kw)
+
+
+def with_retries(fn, policy: RecoveryPolicy | None = None, *,
+                 retry_on=(OSError,), sleep=time.sleep, on_retry=None):
+    """Call ``fn()``; retry transient failures per ``policy``.
+
+    Only exceptions in ``retry_on`` are retried -- deterministic corruption
+    (``StoreCorruptError`` etc.) re-raises immediately since re-reading the
+    same bad bytes cannot help.  ``on_retry(attempt, exc)`` is invoked before
+    each sleep (used for degradation counters).  The final failure is
+    re-raised unchanged.
+    """
+    policy = policy or RecoveryPolicy()
+    delay = policy.backoff
+    for attempt in range(policy.retries + 1):
+        try:
+            return fn()
+        except retry_on as e:
+            if attempt >= policy.retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            if delay > 0:
+                sleep(delay)
+            delay *= policy.multiplier
 
 
 @dataclasses.dataclass

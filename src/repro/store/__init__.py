@@ -11,7 +11,12 @@ Public surface:
   * ``KVPager``                            -- evict / restore KV-cache token
     ranges through archives, one codec for both directions.
   * ``StoreError`` hierarchy               -- ``StoreVersionError`` for
-    incompatible archives, ``StoreCorruptError`` for truncation/checksum.
+    incompatible archives, ``StoreCorruptError`` for truncation/checksum,
+    ``StoreIOError`` for OS reads that failed after retries, and
+    ``PageLostError`` for an unreadable KV block (evicted + counted in
+    ``KVPager.stats["pages_lost"]``).  Recovery policies ("raise" / "skip"
+    / "zero_fill" + transient-IO retry) thread through from the codec; see
+    docs/robustness.md.
 
 ``PlanCache`` / ``DEFAULT_PLAN_CACHE`` now live in ``repro.core.cache``
 (the Codec owns plan reuse); they are re-exported here for compatibility.
@@ -22,8 +27,9 @@ from repro.store.format import (  # noqa: F401
     FORMAT_VERSION,
     StoreCorruptError,
     StoreError,
+    StoreIOError,
     StoreVersionError,
 )
-from repro.store.paging import KVPager  # noqa: F401
+from repro.store.paging import KVPager, PageLostError  # noqa: F401
 from repro.store.reader import Archive, open_archive  # noqa: F401
 from repro.store.writer import ArchiveWriter, write_archive  # noqa: F401

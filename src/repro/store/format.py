@@ -64,6 +64,13 @@ class StoreCorruptError(StoreError):
     """Archive is truncated or fails a checksum."""
 
 
+class StoreIOError(StoreError):
+    """An OS-level read failed and retries (if configured) were exhausted.
+
+    Wraps the underlying ``OSError`` so store consumers catch one exception
+    family whether bytes were corrupt or the filesystem misbehaved."""
+
+
 @dataclasses.dataclass(frozen=True)
 class BlobRef:
     """Byte extent of one payload blob inside the archive file."""
@@ -181,8 +188,72 @@ def unpack_index(buf: bytes) -> tuple:
         doc = json.loads(buf.decode("utf-8"))
     except (UnicodeDecodeError, json.JSONDecodeError) as e:
         raise StoreCorruptError(f"archive index is unreadable: {e}") from e
-    return ([CodebookRecord.from_json(c) for c in doc["codebooks"]],
-            [ChunkRecord.from_json(c) for c in doc["chunks"]])
+    try:
+        records = ([CodebookRecord.from_json(c) for c in doc["codebooks"]],
+                   [ChunkRecord.from_json(c) for c in doc["chunks"]])
+    except (KeyError, TypeError, ValueError, IndexError) as e:
+        # CRC-valid JSON with mangled structure (e.g. an in-memory mutation
+        # before the CRC was stamped) must still fail with a named error.
+        raise StoreCorruptError(
+            f"archive index is structurally invalid: "
+            f"{type(e).__name__}: {e}") from e
+    for rec in records[1]:
+        validate_record(rec)
+    return records
+
+
+def _dtype_ok(name) -> bool:
+    """True when ``name`` parses as a numpy or ml_dtypes (bfloat16 etc.)
+    dtype -- the two families ``jnp.asarray(..., dtype=name)`` accepts."""
+    try:
+        np.dtype(name)
+        return True
+    except TypeError:
+        pass
+    try:
+        import ml_dtypes
+        np.dtype(getattr(ml_dtypes, str(name)))
+        return True
+    except (ImportError, AttributeError, TypeError):
+        return False
+
+
+def validate_record(rec: ChunkRecord) -> None:
+    """Sanity-check a parsed chunk record before any payload is touched.
+
+    The index CRC proves the *bytes* of the index survived; this proves the
+    *values* are self-consistent, so a record mangled before it was CRC'd
+    (or mutated in memory) cannot drive giant allocations or unnamed
+    downstream errors.  Raises ``StoreCorruptError``.
+    """
+    problems = []
+    for f in ("units", "gaps", "outlier_pos", "outlier_val"):
+        ref = getattr(rec, f)
+        if ref.offset < 0 or ref.length < 0:
+            problems.append(f"negative {f} extent {ref.offset}+{ref.length}")
+    n = 1
+    for s in rec.shape:
+        if s < 0:
+            problems.append(f"negative dimension in shape {rec.shape}")
+            break
+        n *= s
+    else:
+        if n != rec.n_symbols:
+            problems.append(f"n_symbols={rec.n_symbols} != prod(shape "
+                            f"{rec.shape})={n}")
+    if rec.total_bits < 0:
+        problems.append(f"negative total_bits {rec.total_bits}")
+    elif rec.total_bits > 8 * rec.units.length:
+        problems.append(f"total_bits={rec.total_bits} exceeds the units "
+                        f"blob ({rec.units.length} bytes)")
+    if rec.subseqs_per_seq < 1:
+        problems.append(f"subseqs_per_seq={rec.subseqs_per_seq} < 1")
+    for f in ("dtype", "orig_dtype"):
+        if not _dtype_ok(getattr(rec, f)):
+            problems.append(f"unparseable {f} {getattr(rec, f)!r}")
+    if problems:
+        raise StoreCorruptError(
+            f"chunk record {rec.name!r} is invalid: " + "; ".join(problems))
 
 
 def align_up(off: int, align: int = BLOB_ALIGN) -> int:

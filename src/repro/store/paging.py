@@ -22,8 +22,25 @@ import numpy as np
 
 from repro.core.cache import PlanCache
 from repro.core.codec import Codec, default_codec
+from repro.core.huffman import pipeline as hp
+from repro.store import format as F
 from repro.store.reader import Archive
 from repro.store.writer import ArchiveWriter
+
+
+class PageLostError(F.StoreError):
+    """An offloaded KV block could not be read back (missing, truncated,
+    corrupt, or mangled archive).
+
+    The pager *evicts* the block and counts ``stats["pages_lost"]`` before
+    raising, so the serving loop degrades (the paged span stays zeroed --
+    attention re-reads masked positions as zeros) instead of crashing on a
+    raw ``FileNotFoundError`` / decode error.  ``block_id`` names the block.
+    """
+
+    def __init__(self, msg: str, block_id: "int | None" = None):
+        super().__init__(msg)
+        self.block_id = block_id
 
 
 def _pageable(name: str, arr, seq_axis: int, hi: int) -> bool:
@@ -53,7 +70,8 @@ class KVPager:
         self._blocks: dict = {}
         self._next_id = 0
         self.stats = {"pages_out": 0, "pages_in": 0,
-                      "bytes_raw": 0, "bytes_compressed": 0}
+                      "bytes_raw": 0, "bytes_compressed": 0,
+                      "pages_lost": 0}
 
     def _span(self, lo: int, hi: int):
         return (slice(None),) * self.seq_axis + (slice(lo, hi),)
@@ -68,6 +86,19 @@ class KVPager:
     def block_meta(self, block_id: int) -> dict:
         """{"path", "lo", "hi", "names"} of one offloaded block."""
         return dict(self._blocks[block_id])
+
+    def _meta(self, block_id: int) -> dict:
+        """Resident-block lookup for the paging paths: a non-resident id
+        (never offloaded, dropped, or already evicted by a prior
+        ``PageLostError``) raises the named error, so a serving loop that
+        re-requests a lost block degrades instead of crashing on
+        ``KeyError``."""
+        meta = self._blocks.get(block_id)
+        if meta is None:
+            raise PageLostError(
+                f"kv block {block_id} is not resident (unknown, dropped, "
+                f"or already evicted after a page loss)", block_id=block_id)
+        return meta
 
     # -- eviction -----------------------------------------------------------
 
@@ -112,22 +143,63 @@ class KVPager:
 
     def fetch(self, block_id: int) -> dict:
         """Decode a block's tensors (device arrays), without touching any
-        cache.  Plan-cache hits make repeat fetches phase-4 only."""
-        meta = self._blocks[block_id]
-        with Archive(meta["path"], codec=self.codec,
-                     plan_cache=self.cache) as ar:
-            out = ar.read_all(meta["names"])
+        cache.  Plan-cache hits make repeat fetches phase-4 only.
+
+        Any store-level failure -- missing/truncated block file, checksum
+        mismatch, decode-guard trip, persistent IO error -- evicts the
+        block, increments ``stats["pages_lost"]``, and raises the named
+        ``PageLostError`` (with the original error chained) so callers
+        catch one exception family.
+        """
+        meta = self._meta(block_id)
+        try:
+            # Chunks read with policy "raise": a partially-recovered KV
+            # block is worse than a named loss -- the span is already
+            # zeroed, which IS the safe degraded state.
+            with Archive(meta["path"], codec=self.codec,
+                         plan_cache=self.cache) as ar:
+                out = ar.read_all(meta["names"], policy="raise")
+            missing = [k for k in meta["names"] if k not in out]
+            if missing:
+                raise F.StoreCorruptError(
+                    f"{meta['path']}: block is missing tensors {missing}")
+        except (F.StoreError, hp.DecodeGuardError, OSError) as e:
+            self._blocks.pop(block_id, None)
+            self.stats["pages_lost"] += 1
+            raise PageLostError(
+                f"kv block {block_id} ({meta['path']}) lost: "
+                f"{type(e).__name__}: {e}", block_id=block_id) from e
         self.stats["pages_in"] += 1
         return out
 
     def page_in(self, cache: dict, block_id: int) -> dict:
-        """Restore a block into ``cache`` at its original token range."""
-        meta = self._blocks[block_id]
+        """Restore a block into ``cache`` at its original token range.
+
+        On a lost block (see ``fetch``) the named ``PageLostError``
+        propagates; the cache is untouched and the paged span stays zeroed,
+        so a caller that catches the error keeps serving degraded.
+        """
+        meta = self._meta(block_id)
         span = self._span(meta["lo"], meta["hi"])
         for k, block in self.fetch(block_id).items():
             cache[k] = cache[k].at[span].set(
                 jnp.asarray(block, cache[k].dtype))
         return cache
+
+    def adopt_block(self, block_id: int, meta: dict):
+        """(Re-)register an offloaded block from its metadata.
+
+        Recovery / restart path: a serving process that inherits block
+        archives on disk (or re-tries a block evicted by ``PageLostError``
+        after the storage heals) re-registers it here.  ``meta`` needs
+        ``path`` / ``lo`` / ``hi`` / ``names`` as returned by
+        ``block_meta``.
+        """
+        missing = {"path", "lo", "hi", "names"} - set(meta)
+        if missing:
+            raise ValueError(f"block meta missing keys {sorted(missing)}")
+        self._blocks[block_id] = dict(meta)
+        self._next_id = max(self._next_id, block_id + 1)
 
     def drop(self, block_id: int):
         """Forget a block and delete its archive."""

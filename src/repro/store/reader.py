@@ -32,6 +32,7 @@ from repro.core.huffman import codebook as cb
 from repro.core.huffman import pipeline as hp
 from repro.core.huffman.encode import EncodedStream
 from repro.core.sz import compressor as sz
+from repro.runtime import fault_tolerance as ft
 from repro.store import format as F
 
 DEFAULT_GROUP_CHUNKS = 8
@@ -54,6 +55,20 @@ class Archive:
         self.codec = codec if codec is not None else default_codec()
         self.cache = (self.codec.plan_cache if plan_cache is None
                       else plan_cache)
+        #: Degradation counters: chunks dropped / zeroed by a non-raise
+        #: recovery policy, and transient-IO retries spent on this archive.
+        self.stats = {"chunks_skipped": 0, "chunks_zero_filled": 0,
+                      "io_retries": 0}
+        # Transient IO errors (OSError) while opening retry per the codec's
+        # recovery policy; corruption (StoreError) never retries.
+        ft.with_retries(self._open, self.codec.recovery_policy(),
+                        on_retry=self._count_retry)
+
+    def _count_retry(self, attempt, exc):
+        self.stats["io_retries"] += 1
+
+    def _open(self):
+        path = self.path
         size = os.path.getsize(path)
         self._f = open(path, "rb")
         try:
@@ -181,11 +196,29 @@ class Archive:
             self.cache.put_plan(key, plan)
         return plan
 
+    def _recover(self, name: str, exc, pol, on_error):
+        """Apply the recovery policy to one failed chunk.
+
+        Returns the substitute array (``zero_fill``), ``None`` (``skip``,
+        counted), or raises the named error (``raise``).
+        """
+        if on_error is not None:
+            on_error(name, exc)
+        if pol.on_error == "raise":
+            raise exc
+        if pol.on_error == "zero_fill":
+            rec = self._chunks.get(name)
+            if rec is not None:
+                self.stats["chunks_zero_filled"] += 1
+                return jnp.zeros(rec.shape, jnp.dtype(rec.orig_dtype))
+        self.stats["chunks_skipped"] += 1
+        return None
+
     def iter_decode(self, names=None, *, group_chunks: int =
                     DEFAULT_GROUP_CHUNKS, method: "str | None" = None,
                     backend: "str | None" = None, t_high: "int | None" = None,
                     fused: "bool | None" = None, validate: bool = True,
-                    prefetch: bool = True):
+                    prefetch: bool = True, policy=None, on_error=None):
         """Yield ``(name, decoded array)`` with I/O overlapped against decode.
 
         Chunks stream in groups of ``group_chunks``: each group decodes as
@@ -195,6 +228,19 @@ class Archive:
         method, backend, tuner ``t_high``, the ``fused``
         decode→dequantize→reconstruct dispatch) defaults to the archive's
         codec; the keyword overrides exist for benchmarking alternates.
+
+        Failure handling (docs/robustness.md): the prefetch thread captures
+        per-chunk errors and hands them to the consumer loop, so an
+        exception in group N+1's read/validate deterministically reaches
+        the caller instead of killing the thread.  ``policy`` (a string or
+        ``RecoveryPolicy``; default: the codec's ``recovery`` config)
+        decides what happens per failed chunk: ``"raise"`` propagates the
+        named error, ``"skip"`` omits the entry (counted in
+        ``stats["chunks_skipped"]``), ``"zero_fill"`` yields zeros of the
+        recorded shape/dtype (``stats["chunks_zero_filled"]``).  Transient
+        ``OSError`` reads retry with backoff first (``stats["io_retries"]``).
+        ``on_error(name, exc)`` is invoked for every failed chunk before
+        the policy applies.
         """
         cfg = self.codec.config
         method = cfg.method if method is None else method
@@ -202,14 +248,35 @@ class Archive:
         fused = cfg.fused if fused is None else fused
         be = (self.codec.backend if backend is None
               else hp.get_backend(backend))
+        pol = self.codec.recovery_policy(policy)
         names = self.names if names is None else list(names)
         groups = [names[i:i + group_chunks]
                   for i in range(0, len(names), group_chunks)]
         if not groups:
             return
 
+        def load_one(name):
+            return ft.with_retries(
+                lambda: self.read_chunk(name, validate=validate), pol,
+                on_retry=self._count_retry)
+
         def load(group):
-            return [self.read_chunk(n, validate=validate) for n in group]
+            # Per-chunk outcomes (Compressed or the exception), NOT a raise:
+            # raising here would kill the prefetch thread and lose the
+            # error; the consumer loop applies the recovery policy instead.
+            out = []
+            for n in group:
+                try:
+                    out.append(load_one(n))
+                except F.StoreError as e:
+                    out.append(e)
+                except OSError as e:
+                    err = F.StoreIOError(
+                        f"{self.path}: reading chunk {n!r} failed after "
+                        f"{pol.retries} retries: {e}")
+                    err.__cause__ = e
+                    out.append(err)
+            return out
 
         pool = (futures.ThreadPoolExecutor(
             1, thread_name_prefix="szt-prefetch")
@@ -220,14 +287,50 @@ class Archive:
                 blobs = nxt.result() if pool else load(group)
                 if pool and gi + 1 < len(groups):
                     nxt = pool.submit(load, groups[gi + 1])
-                plans = [self._plan_for(self.chunk(n), c, method, t_high, be)
-                         for n, c in zip(group, blobs)]
-                outs = sz.decompress_batch(blobs, method=method, backend=be,
-                                           t_high=t_high, plans=plans,
-                                           fused=fused)
-                for name, out in zip(group, outs):
-                    yield name, jnp.asarray(
-                        out, jnp.dtype(self.chunk(name).orig_dtype))
+
+                failed = {}                      # name -> named exception
+                ok_names, ok_cs, ok_plans = [], [], []
+                for n, c in zip(group, blobs):
+                    if isinstance(c, Exception):
+                        failed[n] = c
+                        continue
+                    try:
+                        plan = self._plan_for(self.chunk(n), c, method,
+                                              t_high, be)
+                    except hp.DecodeGuardError as e:
+                        failed[n] = e
+                        continue
+                    ok_names.append(n)
+                    ok_cs.append(c)
+                    ok_plans.append(plan)
+
+                outs = {}
+                if ok_cs:
+                    try:
+                        decoded = sz.decompress_batch(
+                            ok_cs, method=method, backend=be, t_high=t_high,
+                            plans=ok_plans, fused=fused)
+                        outs = dict(zip(ok_names, decoded))
+                    except hp.DecodeGuardError:
+                        # Salvage the group chunk-by-chunk so one malformed
+                        # stream cannot take down its batch-mates.
+                        for n, c, p in zip(ok_names, ok_cs, ok_plans):
+                            try:
+                                outs[n] = sz.decompress(
+                                    c, method=method, backend=be,
+                                    t_high=t_high, plan=p, fused=fused)
+                            except hp.DecodeGuardError as e:
+                                failed[n] = e
+
+                for name in group:
+                    if name in outs:
+                        yield name, jnp.asarray(
+                            outs[name],
+                            jnp.dtype(self.chunk(name).orig_dtype))
+                        continue
+                    sub = self._recover(name, failed[name], pol, on_error)
+                    if sub is not None:
+                        yield name, sub
         finally:
             if pool:
                 pool.shutdown(wait=False, cancel_futures=True)

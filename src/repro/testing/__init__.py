@@ -1,0 +1,16 @@
+"""Testing utilities: deterministic fault injection (see ``faults``).
+
+Importable by tests AND by ``tools/faultinject.py``; keep it dependency-
+light (numpy + the repro package itself).
+"""
+
+from repro.testing.faults import (  # noqa: F401
+    CampaignReport,
+    CaseResult,
+    FaultCase,
+    NAMED_ERRORS,
+    build_corpus,
+    flip_bit,
+    run_campaign,
+    truncate_file,
+)

@@ -1,0 +1,464 @@
+"""Fault-injection hardening: recovery policies, decoder guards, salvage
+restore, lost KV pages, and the corruption-campaign harness itself."""
+
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import (CheckpointIntegrityError,
+                                      CheckpointManager)
+from repro.core import Codec, CodecConfig
+from repro.core.cache import PlanCache
+from repro.core.huffman import pipeline as hp
+from repro.core.sz import compressor as sz
+from repro.data.pipeline import smooth_field
+from repro.models import kvcache
+from repro.runtime import fault_tolerance as ft
+from repro.store import (Archive, ArchiveWriter, KVPager, PageLostError,
+                         StoreCorruptError, StoreError, StoreIOError)
+from repro.testing import NAMED_ERRORS, flip_bit, run_campaign
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # container has no hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _codec(**kw):
+    kw.setdefault("eb", 1e-3)
+    return Codec(CodecConfig(**kw), plan_cache=PlanCache())
+
+
+def _write(path, codec, names=("t0", "t1", "t2", "t3"), seed=0):
+    arrays = {}
+    with ArchiveWriter(path, codec=codec) as w:
+        for i, n in enumerate(names):
+            arrays[n] = np.asarray(smooth_field((40, 36 + 4 * i),
+                                                seed=seed + i), np.float32)
+            w.add_array(n, arrays[n])
+    return arrays
+
+
+def _flip_in_chunk(path, codec, name, rng):
+    with Archive(path, codec=codec) as ar:
+        rec = ar.chunk(name)
+    flip_bit(path, rec.units.offset + int(rng.integers(rec.units.length)),
+             int(rng.integers(8)))
+
+
+# ---------------------------------------------------------------------------
+# RecoveryPolicy / with_retries units
+# ---------------------------------------------------------------------------
+
+
+class TestRecoveryPolicy:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ft.RecoveryPolicy(on_error="explode")
+        with pytest.raises(ValueError):
+            ft.RecoveryPolicy(retries=-1)
+
+    def test_resolve_inherits_config(self):
+        codec = _codec(recovery="zero_fill", io_retries=5, io_backoff=0.5)
+        pol = codec.recovery_policy()
+        assert (pol.on_error, pol.retries, pol.backoff) == \
+            ("zero_fill", 5, 0.5)
+        # a bare string overrides on_error but keeps the IO knobs
+        pol = codec.recovery_policy("skip")
+        assert (pol.on_error, pol.retries) == ("skip", 5)
+        # a full policy instance passes through untouched
+        mine = ft.RecoveryPolicy(retries=9)
+        assert codec.recovery_policy(mine) is mine
+
+    def test_config_rejects_bad_recovery(self):
+        with pytest.raises(ValueError):
+            CodecConfig(recovery="panic")
+
+    def test_with_retries_transient(self):
+        calls, sleeps = [], []
+        def fn():
+            calls.append(1)
+            if len(calls) < 3:
+                raise OSError("flaky")
+            return "ok"
+        pol = ft.RecoveryPolicy(retries=3, backoff=0.1, multiplier=2.0)
+        assert ft.with_retries(fn, pol, sleep=sleeps.append) == "ok"
+        assert len(calls) == 3
+        assert sleeps == [0.1, 0.2]
+
+    def test_with_retries_exhausted_and_selective(self):
+        def always(): raise OSError("down")
+        with pytest.raises(OSError):
+            ft.with_retries(always, ft.RecoveryPolicy(retries=2),
+                            sleep=lambda s: None)
+        # deterministic corruption must never be retried
+        calls = []
+        def corrupt():
+            calls.append(1)
+            raise StoreCorruptError("bad crc")
+        with pytest.raises(StoreCorruptError):
+            ft.with_retries(corrupt, ft.RecoveryPolicy(retries=5),
+                            sleep=lambda s: None)
+        assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# Decoder-level guards
+# ---------------------------------------------------------------------------
+
+
+class TestDecoderGuards:
+    def test_corrupt_codebook_rejected_at_build_plan(self):
+        codec = _codec()
+        c = codec.compress(jnp.asarray(smooth_field((64, 32), seed=3),
+                                       jnp.float32))
+        bad_len = np.array(c.codebook.enc_len)
+        used = np.flatnonzero(bad_len)
+        bad_len[used[: max(2, used.size // 2)]] = 1   # Kraft sum > 1
+        book = dataclasses.replace(c.codebook, enc_len=bad_len)
+        before = hp.get_backend("ref").stats["decode_guard_trips"]
+        with pytest.raises(hp.DecodeGuardError, match="codebook"):
+            hp.build_plan(c.stream, book, method="gap", backend="ref")
+        assert hp.get_backend("ref").stats["decode_guard_trips"] == before + 1
+
+    def test_dec_len_over_max_rejected(self):
+        codec = _codec()
+        c = codec.compress(jnp.asarray(smooth_field((64, 32), seed=4),
+                                       jnp.float32))
+        dec_len = np.array(c.codebook.dec_len)
+        dec_len[0] = c.codebook.max_len + 7
+        book = dataclasses.replace(c.codebook, dec_len=dec_len)
+        with pytest.raises(hp.DecodeGuardError):
+            hp.build_plan(c.stream, book, method="gap", backend="ref")
+
+    def test_symbol_count_mismatch_guard(self):
+        codec = _codec()
+        c = codec.compress(jnp.asarray(smooth_field((64, 32), seed=5),
+                                       jnp.float32))
+        # claim half the bits: the plan decodes fewer symbols than shape
+        stream = dataclasses.replace(
+            c.stream, total_bits=jnp.asarray(int(c.stream.total_bits) // 2,
+                                             jnp.int32))
+        bad = dataclasses.replace(c, stream=stream)
+        with pytest.raises(hp.DecodeGuardError, match="symbol-count"):
+            _codec().decompress(bad)
+
+    def test_oversized_gap_clamped_not_crashed(self):
+        codec = _codec()
+        c = codec.compress(jnp.asarray(smooth_field((64, 32), seed=6),
+                                       jnp.float32))
+        gaps = np.array(c.stream.gaps)
+        gaps[gaps.size // 2] = 255        # legit gaps never exceed 128
+        stream = dataclasses.replace(c.stream, gaps=jnp.asarray(gaps))
+        before = hp.get_backend("ref").stats["decode_guard_trips"]
+        hp.build_plan(stream, c.codebook, method="gap", backend="ref")
+        assert hp.get_backend("ref").stats["decode_guard_trips"] == before + 1
+
+    def test_guard_trips_key_in_stats(self):
+        assert "decode_guard_trips" in hp.get_backend("ref").stats
+
+
+# ---------------------------------------------------------------------------
+# Single-byte-flip property: named error OR bit-exact, never silent
+# ---------------------------------------------------------------------------
+
+
+class TestSingleByteFlip:
+    @pytest.mark.parametrize(
+        "backend",
+        ["ref", pytest.param("pallas", marks=pytest.mark.slow)])
+    def test_seeded_sweep(self, tmp_path, backend):
+        codec = _codec(backend=backend)
+        path = str(tmp_path / "a.szt")
+        _write(path, codec, names=("x", "y"))
+        with Archive(path, codec=codec) as ar:
+            baseline = {n: np.asarray(v) for n, v in ar.read_all().items()}
+        size, pristine = os.path.getsize(path), open(path, "rb").read()
+        rng = np.random.default_rng(0)
+        for _ in range(40):
+            with open(path, "wb") as f:
+                f.write(pristine)
+            flip_bit(path, int(rng.integers(size)), int(rng.integers(8)))
+            self._check_one(path, codec, baseline)
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=60, deadline=None)
+        @given(frac=st.floats(0, 1, exclude_max=True),
+               bit=st.integers(0, 7))
+        def test_property(self, tmp_path_factory, frac, bit):
+            codec = _codec()
+            d = tmp_path_factory.mktemp("flip")
+            path = str(d / "a.szt")
+            _write(path, codec, names=("x", "y"))
+            with Archive(path, codec=codec) as ar:
+                baseline = {n: np.asarray(v)
+                            for n, v in ar.read_all().items()}
+            flip_bit(path, int(frac * os.path.getsize(path)), bit)
+            self._check_one(path, codec, baseline)
+
+    @staticmethod
+    def _check_one(path, codec, baseline):
+        """The invariant: a flipped archive either raises a named error or
+        round-trips bit-exactly (flip landed in dead bytes)."""
+        try:
+            with Archive(path, codec=codec) as ar:
+                out = ar.read_all(policy="raise")
+        except NAMED_ERRORS:
+            return
+        assert set(out) == set(baseline)
+        for n in baseline:
+            assert np.asarray(out[n]).tobytes() == baseline[n].tobytes(), \
+                f"{n}: silent corruption"
+
+
+# ---------------------------------------------------------------------------
+# Archive recovery policies + prefetch error propagation
+# ---------------------------------------------------------------------------
+
+
+class TestArchiveRecovery:
+    def test_policies(self, tmp_path):
+        codec = _codec()
+        path = str(tmp_path / "a.szt")
+        arrays = _write(path, codec)
+        rng = np.random.default_rng(1)
+        _flip_in_chunk(path, codec, "t2", rng)
+
+        with Archive(path, codec=codec) as ar:
+            with pytest.raises(StoreCorruptError, match="t2"):
+                ar.read_all(policy="raise")
+
+        seen = []
+        with Archive(path, codec=codec) as ar:
+            out = ar.read_all(policy="skip",
+                              on_error=lambda n, e: seen.append((n, e)))
+            assert sorted(out) == ["t0", "t1", "t3"]
+            assert ar.stats["chunks_skipped"] == 1
+        assert seen[0][0] == "t2"
+        assert isinstance(seen[0][1], StoreError)
+
+        with Archive(path, codec=codec) as ar:
+            out = ar.read_all(policy="zero_fill")
+            assert sorted(out) == ["t0", "t1", "t2", "t3"]
+            assert not np.any(np.asarray(out["t2"]))
+            assert out["t2"].shape == arrays["t2"].shape
+            assert ar.stats["chunks_zero_filled"] == 1
+
+    def test_codec_config_default_policy(self, tmp_path):
+        codec = _codec(recovery="skip")
+        path = str(tmp_path / "a.szt")
+        _write(path, codec)
+        _flip_in_chunk(path, codec, "t0", np.random.default_rng(2))
+        with Archive(path, codec=codec) as ar:
+            out = ar.read_all()           # no per-call policy: config wins
+            assert sorted(out) == ["t1", "t2", "t3"]
+
+    def test_prefetch_error_reaches_consumer(self, tmp_path):
+        """Regression: a corrupt chunk in a *later* prefetched group must
+        surface to the iterating consumer, not die with the thread."""
+        codec = _codec()
+        path = str(tmp_path / "a.szt")
+        names = tuple(f"t{i}" for i in range(6))
+        _write(path, codec, names=names)
+        _flip_in_chunk(path, codec, "t5", np.random.default_rng(3))
+        with Archive(path, codec=codec) as ar:
+            it = ar.iter_decode(group_chunks=2, prefetch=True,
+                                policy="raise")
+            got = []
+            with pytest.raises(StoreCorruptError, match="t5"):
+                for n, _ in it:
+                    got.append(n)
+        assert got == ["t0", "t1", "t2", "t3", "t4"]
+
+    def test_transient_io_retried_then_named(self, tmp_path):
+        from repro.testing.faults import inject_blob_failures
+        codec = _codec(io_retries=2)
+        path = str(tmp_path / "a.szt")
+        _write(path, codec, names=("x",))
+        with Archive(path, codec=codec) as ar:
+            baseline = np.asarray(ar.read_tensor("x"))
+        with Archive(path, codec=codec) as ar:
+            inject_blob_failures(ar, 2)
+            out = ar.read_all(policy="raise")
+            assert np.asarray(out["x"]).tobytes() == baseline.tobytes()
+            assert ar.stats["io_retries"] >= 1
+        with Archive(path, codec=codec) as ar:
+            inject_blob_failures(ar, 10 ** 6)
+            with pytest.raises(StoreIOError):
+                ar.read_all(policy="raise")
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint salvage
+# ---------------------------------------------------------------------------
+
+
+def _ckpt(tmp_path, codec):
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, codec=codec, compress_min_size=1024)
+    rng = np.random.default_rng(7)
+    params = {"w1": rng.normal(size=(48, 48)).astype(np.float32),
+              "w2": rng.normal(size=(40, 40)).astype(np.float32),
+              "n": np.int32(9)}
+    mgr.save(1, params)
+    mgr.save(2, params)
+    return d, mgr, params
+
+
+class TestCheckpointSalvage:
+    def test_atomic_manifest_write(self, tmp_path):
+        d, mgr, _ = _ckpt(tmp_path, _codec())
+        step = os.path.join(d, "step_00000002")
+        assert os.path.exists(os.path.join(step, "manifest.json"))
+        assert not os.path.exists(
+            os.path.join(step, "manifest.json.tmp"))
+        r = mgr.restore()
+        assert r["step"] == 2 and not r["quarantined"]
+
+    def test_skip_quarantines_corrupt_entry(self, tmp_path):
+        codec = _codec()
+        d, mgr, params = _ckpt(tmp_path, codec)
+        apath = os.path.join(d, "step_00000002", "archive.szt")
+        with Archive(apath, codec=codec) as ar:
+            rec = ar.chunk("params.w1")
+        flip_bit(apath, rec.units.offset + rec.units.length // 2, 3)
+
+        with pytest.raises(CheckpointIntegrityError):
+            mgr.restore(2)                # default policy: raise
+        r = mgr.restore(2, policy="skip")
+        assert list(r["quarantined"]) == ["params.w1"]
+        assert "w1" not in r["params"]
+        assert np.allclose(np.asarray(r["params"]["w2"]), params["w2"],
+                           atol=1e-2)
+        assert int(r["params"]["n"]) == 9
+
+    def test_zero_fill_keeps_tree_structure(self, tmp_path):
+        codec = _codec()
+        d, mgr, params = _ckpt(tmp_path, codec)
+        apath = os.path.join(d, "step_00000002", "archive.szt")
+        os.unlink(apath)                  # lose the whole archive
+        r = mgr.restore(2, policy="zero_fill")
+        assert set(r["quarantined"]) == {"params.w1", "params.w2"}
+        assert r["params"]["w1"].shape == params["w1"].shape
+        assert not np.any(np.asarray(r["params"]["w1"]))
+        assert int(r["params"]["n"]) == 9
+
+    def test_torn_manifest_falls_back_to_newest_intact(self, tmp_path):
+        codec = _codec()
+        d, mgr, params = _ckpt(tmp_path, codec)
+        mpath = os.path.join(d, "step_00000002", "manifest.json")
+        with open(mpath, "r+b") as f:
+            f.truncate(os.path.getsize(mpath) // 2)
+        with pytest.raises(CheckpointIntegrityError):
+            mgr.restore()                 # raise: newest step is torn
+        r = mgr.restore(policy="skip")
+        assert r["step"] == 1
+        assert r["fallback_from"][0]["step"] == 2
+        assert np.allclose(np.asarray(r["params"]["w1"]), params["w1"],
+                           atol=1e-2)
+
+    def test_corrupt_raw_shard_named_and_quarantined(self, tmp_path):
+        codec = _codec()
+        d, mgr, _ = _ckpt(tmp_path, codec)
+        npy = os.path.join(d, "step_00000002", "params.n.npy")
+        flip_bit(npy, os.path.getsize(npy) - 1, 0)
+        with pytest.raises(CheckpointIntegrityError, match="params.n"):
+            mgr.restore(2)
+        r = mgr.restore(2, policy="skip")
+        assert "params.n" in r["quarantined"]
+        assert "w1" in r["params"]
+
+
+# ---------------------------------------------------------------------------
+# KV paging degradation
+# ---------------------------------------------------------------------------
+
+
+def _paged(tmp_path, codec):
+    pager = KVPager(str(tmp_path / "kv"), codec=codec, seq_axis=2)
+    rng = np.random.default_rng(11)
+    cache = {k: jnp.asarray(rng.normal(size=(1, 1, 16, 8)), jnp.float32)
+             for k in ("k", "v")}
+    cache, bid = pager.offload(cache, 0, 8, keys=["k", "v"])
+    return pager, cache, bid
+
+
+class TestPagingDegradation:
+    def test_lost_block_named_counted_evicted(self, tmp_path):
+        codec = _codec()
+        pager, cache, bid = _paged(tmp_path, codec)
+        os.unlink(pager.block_meta(bid)["path"])
+        with pytest.raises(PageLostError) as ei:
+            pager.page_in(cache, bid)
+        assert ei.value.block_id == bid
+        assert pager.stats["pages_lost"] == 1
+        assert bid not in pager.resident_blocks
+        # the paged span is untouched (still zeroed): safe degraded state
+        assert not np.any(np.asarray(cache["k"][:, :, :8]))
+
+    def test_corrupt_block_named(self, tmp_path):
+        codec = _codec()
+        pager, cache, bid = _paged(tmp_path, codec)
+        path = pager.block_meta(bid)["path"]
+        flip_bit(path, os.path.getsize(path) // 2, 5)
+        with pytest.raises(PageLostError):
+            pager.page_in(cache, bid)
+
+    def test_page_in_blocks_on_lost_continues(self, tmp_path):
+        codec = _codec()
+        pager = KVPager(str(tmp_path / "kv"), codec=codec, seq_axis=2)
+        rng = np.random.default_rng(13)
+        cache = {k: jnp.asarray(rng.normal(size=(1, 1, 16, 8)), jnp.float32)
+                 for k in ("k", "v")}
+        snap = {k: np.asarray(v) for k, v in cache.items()}
+        cache, b0 = pager.offload(cache, 0, 8, keys=["k", "v"])
+        cache, b1 = pager.offload(cache, 8, 16, keys=["k", "v"])
+        os.unlink(pager.block_meta(b0)["path"])
+        lost = []
+        cache = kvcache.page_in_blocks(cache, pager, [b0, b1],
+                                       on_lost=lambda b, e: lost.append(b))
+        assert lost == [b0]
+        assert not np.any(np.asarray(cache["k"][:, :, :8]))   # stays zeroed
+        assert np.allclose(np.asarray(cache["k"][:, :, 8:]),
+                           snap["k"][:, :, 8:], atol=1e-2)    # restored
+        # without the callback the named error propagates
+        with pytest.raises(PageLostError):
+            kvcache.page_in_blocks(cache, pager, [b0])
+
+    def test_adopt_block_reregisters(self, tmp_path):
+        codec = _codec()
+        pager, cache, bid = _paged(tmp_path, codec)
+        meta = pager.block_meta(bid)
+        fresh = KVPager(pager.dir, codec=codec, seq_axis=2)
+        fresh.adopt_block(bid, meta)
+        out = fresh.fetch(bid)
+        assert set(out) == {"k", "v"}
+        with pytest.raises(ValueError, match="missing keys"):
+            fresh.adopt_block(99, {"path": "x"})
+
+
+# ---------------------------------------------------------------------------
+# The campaign harness itself
+# ---------------------------------------------------------------------------
+
+
+class TestCampaign:
+    def test_small_campaign_clean(self, tmp_path):
+        report = run_campaign(seed=1, cases=8,
+                              base_dir=str(tmp_path / "campaign"))
+        assert len(report.results) == 8
+        assert report.ok, report.summary()
+        # every consumer exercised at least once
+        assert {r.case.consumer for r in report.results} == \
+            {"store", "decode", "checkpoint", "paging"}
+
+    def test_deterministic_schedule(self, tmp_path):
+        a = run_campaign(seed=2, cases=4, base_dir=str(tmp_path / "a"))
+        b = run_campaign(seed=2, cases=4, base_dir=str(tmp_path / "b"))
+        assert [(r.case.kind, r.case.seed) for r in a.results] == \
+            [(r.case.kind, r.case.seed) for r in b.results]
