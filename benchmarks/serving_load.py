@@ -1,0 +1,59 @@
+"""Serving load: continuous batching + prefix sharing vs per-session paging.
+
+The "many concurrent sessions" scenario from docs/serving.md, measured:
+a corpus of offloaded KV blocks (hot shared prompt prefix + per-session
+unique blocks) is replayed with Poisson arrivals in three modes --
+
+  * **baseline** -- each session demand-pages its blocks synchronously on
+    its own thread (``KVPager.fetch`` per block; the shared prefix is
+    re-decoded by every session);
+  * **sched_serial** -- the ``DecodeScheduler`` with ``overlap=False``:
+    batching-window coalescing + prefix sharing, but stage and decode on
+    one thread (the double-buffering ablation);
+  * **sched_overlap** -- the full scheduler: tick N+1's host stage runs
+    on the I/O thread while tick N decodes.
+
+The ``us`` column is **p99 time-to-first-token** (the serving-tail metric
+the scheduler exists to improve); derived columns carry p50, decode
+dispatches per block request, and the scheduler's sharing counters.
+Structural invariants (decode-once, dispatch reduction) are asserted by
+``repro.serving.loadgen --check`` in CI, not here -- the benchmark is the
+timing record.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+from repro.serving import build_corpus, run_load
+
+
+def run(quick: bool = False):
+    n_sessions = 24 if quick else 48
+    rate = 400.0
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="bench_serving_") as d:
+        corpus = build_corpus(d, n_sessions=n_sessions, prefix_blocks=4,
+                              unique_blocks=1, tokens_per_block=8, seed=0)
+        tag = f"serving/s{n_sessions}"
+
+        base = run_load(corpus, mode="baseline", rate_per_s=rate, seed=0)
+        rows.append((
+            f"{tag}/baseline", base["ttft"]["p99_ms"] * 1e3,
+            f"p50_ms={base['ttft']['p50_ms']:.1f};"
+            f"dispatch_per_req={base['dispatches_per_request']:.3f};"
+            f"wall_s={base['wall_s']:.2f}"))
+
+        for label, overlap in (("sched_serial", False),
+                               ("sched_overlap", True)):
+            r = run_load(corpus, mode="scheduler", rate_per_s=rate, seed=0,
+                         overlap=overlap)
+            st = r["scheduler"]
+            rows.append((
+                f"{tag}/{label}", r["ttft"]["p99_ms"] * 1e3,
+                f"p50_ms={r['ttft']['p50_ms']:.1f};"
+                f"dispatch_per_req={r['dispatches_per_request']:.3f};"
+                f"prefix_hits={st['prefix_hits']};"
+                f"coalesced={st['coalesced_requests']};"
+                f"p99_speedup={base['ttft']['p99_ms'] / max(r['ttft']['p99_ms'], 1e-9):.2f}x"))
+    return rows

@@ -123,6 +123,7 @@ class PlanCache:
         self.max_plans = max_plans
         self._books: dict = {}
         self._plans: collections.OrderedDict = collections.OrderedDict()
+        self._inflight: dict = {}
         self._lock = threading.Lock()
         self.stats = {"plan_hits": 0, "plan_misses": 0,
                       "lut_hits": 0, "lut_misses": 0}
@@ -160,6 +161,50 @@ class PlanCache:
             self._plans.move_to_end(key)
             while len(self._plans) > self.max_plans:
                 self._plans.popitem(last=False)
+
+    def get_or_build_plan(self, key, build_fn):
+        """Single-flight plan resolution: concurrent misses on the same key
+        build ONCE (one ``plan_builds`` tick), everyone else blocks on the
+        winner's result.  This keeps the build counters deterministic when
+        N serving threads decode the same hot prefix through one shared
+        codec -- without it, simultaneous misses each rebuild the plan and
+        the "decoded once" invariant is unverifiable.
+
+        Build failures propagate to every waiter and are not cached, so a
+        transient error does not poison the key.
+        """
+        import concurrent.futures as futures
+
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._plans.move_to_end(key)
+                self.stats["plan_hits"] += 1
+                return plan
+            fut = self._inflight.get(key)
+            owner = fut is None
+            if owner:
+                fut = futures.Future()
+                self._inflight[key] = fut
+                self.stats["plan_misses"] += 1
+            else:
+                # Another thread is building this exact plan; its result
+                # serves us too (a hit: the plan is not rebuilt).
+                self.stats["plan_hits"] += 1
+        if not owner:
+            return fut.result()
+        try:
+            plan = build_fn()
+        except BaseException as e:
+            with self._lock:
+                self._inflight.pop(key, None)
+            fut.set_exception(e)
+            raise
+        self.put_plan(key, plan)
+        with self._lock:
+            self._inflight.pop(key, None)
+        fut.set_result(plan)
+        return plan
 
     def clear(self):
         with self._lock:

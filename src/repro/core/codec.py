@@ -243,15 +243,15 @@ class Codec:
         """Cached ``DecoderPlan`` for one tensor, keyed by content digest.
 
         The key space is shared with the archive reader: a plan built while
-        streaming a ``.szt`` chunk is a hit here and vice versa.
+        streaming a ``.szt`` chunk is a hit here and vice versa.  Plan
+        resolution is single-flight (``PlanCache.get_or_build_plan``): N
+        threads missing on the same payload concurrently build it once.
         """
         c = self.config
         key = (compressed_digest(compressed), c.method, c.t_high)
-        plan = self.plan_cache.get_plan(key)
-        if plan is None:
-            plan = self.build_plan(compressed.stream, compressed.codebook)
-            self.plan_cache.put_plan(key, plan)
-        return plan
+        return self.plan_cache.get_or_build_plan(
+            key, lambda: self.build_plan(compressed.stream,
+                                         compressed.codebook))
 
     def decompress(self, compressed: Compressed, *, plan=None):
         """Decompress one tensor under the codec's policy.

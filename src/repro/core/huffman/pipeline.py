@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Any, Callable
 
 import jax
@@ -222,33 +223,43 @@ class DecodeBackend:
                                  "fused_dispatches": 0,
                                  "fused_fallbacks": 0,
                                  "decode_guard_trips": 0})
+    _stats_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @property
     def supports_fused(self) -> bool:
         return (self.fused_tiles_fn is not None
                 and self.fused_padded_fn is not None)
 
+    def bump(self, key: str, n: int = 1):
+        """Atomic counter increment: one backend handle is shared by every
+        codec on that backend, including N serving threads decoding through
+        one scheduler, so a bare ``+=`` would drop counts."""
+        with self._stats_lock:
+            self.stats[key] += n
+
     def reset_stats(self):
-        for k in self.stats:
-            self.stats[k] = 0
+        with self._stats_lock:
+            for k in self.stats:
+                self.stats[k] = 0
 
     # Counted dispatch wrappers: every phase-4 launch goes through these.
     def decode_tiles(self, *args, **kwargs):
-        self.stats["decode_write_dispatches"] += 1
+        self.bump("decode_write_dispatches")
         return self.tiles_fn(*args, **kwargs)
 
     def decode_padded(self, *args, **kwargs):
-        self.stats["decode_write_dispatches"] += 1
+        self.bump("decode_write_dispatches")
         return self.padded_fn(*args, **kwargs)
 
     def decode_tiles_fused(self, *args, **kwargs):
-        self.stats["decode_write_dispatches"] += 1
-        self.stats["fused_dispatches"] += 1
+        self.bump("decode_write_dispatches")
+        self.bump("fused_dispatches")
         return self.fused_tiles_fn(*args, **kwargs)
 
     def decode_padded_fused(self, *args, **kwargs):
-        self.stats["decode_write_dispatches"] += 1
-        self.stats["fused_dispatches"] += 1
+        self.bump("decode_write_dispatches")
+        self.bump("fused_dispatches")
         return self.fused_padded_fn(*args, **kwargs)
 
 
@@ -427,13 +438,21 @@ class EncodeBackend:
         default_factory=lambda: {"encode_dispatches": 0,
                                  "encode_fallbacks": 0,
                                  "encoder_plan_builds": 0})
+    _stats_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def bump(self, key: str, n: int = 1):
+        """Atomic counter increment (see ``DecodeBackend.bump``)."""
+        with self._stats_lock:
+            self.stats[key] += n
 
     def reset_stats(self):
-        for k in self.stats:
-            self.stats[k] = 0
+        with self._stats_lock:
+            for k in self.stats:
+                self.stats[k] = 0
 
     def pack(self, symbols, enc_code, enc_len, total_bits, sps, min_len):
-        self.stats["encode_dispatches"] += 1
+        self.bump("encode_dispatches")
         return self.pack_fn(symbols, enc_code, enc_len, total_bits, sps,
                             min_len)
 
@@ -596,7 +615,7 @@ def build_encoder_plan(freq, max_len: int, subseqs_per_seq: int,
     from repro.core.huffman import codebook as cb
 
     be = get_encode_backend(backend)
-    be.stats["encoder_plan_builds"] += 1
+    be.bump("encoder_plan_builds")
     freq_np = np.asarray(freq, dtype=np.int64)
     book = cb.build_codebook(freq_np, max_len=max_len)
     total_bits = int((freq_np * book.enc_len.astype(np.int64)).sum())
@@ -678,10 +697,10 @@ def build_plan(stream: EncodedStream, codebook, method: str = "gap",
     and benchmarks can assert cache hits.
     """
     be = get_backend(backend)
-    be.stats["plan_builds"] += 1
+    be.bump("plan_builds")
     problems = _cb.validate_codebook(codebook)
     if problems:
-        be.stats["decode_guard_trips"] += 1
+        be.bump("decode_guard_trips")
         raise DecodeGuardError("corrupt codebook rejected at build_plan: "
                                + "; ".join(problems))
     luts = _as_luts(codebook)
@@ -700,7 +719,7 @@ def build_plan(stream: EncodedStream, codebook, method: str = "gap",
         gaps = stream.gaps.astype(jnp.int32)
         if stream.gaps.size and int(np.asarray(stream.gaps).max(
                 initial=0)) > SUBSEQ_BITS:
-            be.stats["decode_guard_trips"] += 1
+            be.bump("decode_guard_trips")
             gaps = jnp.minimum(gaps, SUBSEQ_BITS)
         starts = boundaries + gaps
         counts = be.count_fn(units, luts.dec_sym, luts.dec_len, starts, ends,

@@ -156,7 +156,7 @@ def compress(
 
     ebe = hp.get_encode_backend(encode_backend)
     if ebe.device and encode_unsupported_reason(x, ebe) is not None:
-        ebe.stats["encode_fallbacks"] += 1
+        ebe.bump("encode_fallbacks")
         ebe = hp.get_encode_backend("ref")
 
     if ebe.device:
@@ -256,7 +256,7 @@ def _guard_symbol_count(c: Compressed, plan, backend) -> None:
         return
     total = int(np.asarray(plan.seq_counts).sum())
     if total != c.n_symbols:
-        hp.get_backend(backend).stats["decode_guard_trips"] += 1
+        hp.get_backend(backend).bump("decode_guard_trips")
         raise hp.DecodeGuardError(
             f"symbol-count mismatch: plan decodes {total} symbols but the "
             f"tensor records n_symbols={c.n_symbols} (shape "
@@ -309,7 +309,7 @@ def decompress(
                             tile_syms=tile_syms, t_high=t_high,
                             transform=_fused_transform(c))
             return out.reshape(c.shape)
-        hp.get_backend(backend).stats["fused_fallbacks"] += 1
+        hp.get_backend(backend).bump("fused_fallbacks")
 
     if method == "naive_ref":
         codes = hd.decode_sequential(jnp.asarray(c.stream.units),
@@ -370,7 +370,7 @@ def decompress_batch(
                     t_high=t_high, plan=plans[i] if plans else None,
                     fused=True)
             else:
-                be.stats["fused_fallbacks"] += 1
+                be.bump("fused_fallbacks")
                 rest.append(i)
         if rest:
             codes = hp.decode_batch(

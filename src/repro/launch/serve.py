@@ -10,13 +10,19 @@ cache compression ratio, and the decode-path error introduced.
 compressed tensor store*: prefix blocks are evicted to ``.szt`` archives
 (``repro.store.KVPager``) and demand-paged back before generation; repeat
 page-ins of a block hit the plan cache, so steady-state paging is pure
-phase-4 decode.
+phase-4 decode.  Page-in decodes all blocks in one class-merged dispatch
+set; with ``--concurrency N`` the blocks are instead requested by N
+concurrent decode streams through one shared ``repro.serving``
+scheduler -- their requests coalesce within ``--batch-window`` and the
+shared prefix decodes exactly once.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --batch 4 --prompt-len 32 --gen-len 32 --compress-kv --kv-eb 1e-3
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --kv-offload --kv-block 16 --kv-offload-dir /tmp/kv_blocks
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --kv-offload --concurrency 8 --batch-window 0.002
 """
 
 from __future__ import annotations
@@ -62,6 +68,16 @@ def main(argv=None):
     ap.add_argument("--kv-offload-dir", default=None,
                     help="directory for KV block archives "
                          "(default: a temp dir)")
+    ap.add_argument("--concurrency", type=int, default=1,
+                    help="with --kv-offload: number of concurrent decode "
+                         "streams paging the prompt blocks back through one "
+                         "shared serving scheduler (they share the hot "
+                         "prefix, so its blocks decode once; 1 = direct "
+                         "batched page-in, no scheduler)")
+    ap.add_argument("--batch-window", type=float, default=0.002,
+                    help="scheduler batching window in seconds: page-in "
+                         "requests arriving within one window coalesce "
+                         "into one class-merged decode dispatch set")
     ap.add_argument("--kv-recovery", default="raise",
                     choices=["raise", "skip", "zero_fill"],
                     help="recovery policy for lost/corrupt KV blocks: "
@@ -130,7 +146,8 @@ def main(argv=None):
         import tempfile
 
         from repro.models.kvcache import (KVPager, offload_prefix,
-                                          page_in_blocks)
+                                          page_in_blocks_batched)
+        from repro.store import PageLostError
 
         # Only tensors with a kv_len sequence axis at axis 2 are pageable
         # (ssm/rwkv recurrent states have no token axis to evict).
@@ -152,7 +169,55 @@ def main(argv=None):
         lost: list = []
         on_lost = (None if args.kv_recovery == "raise"
                    else lambda bid, e: lost.append((bid, e)))
-        cache = page_in_blocks(cache, pager, block_ids, on_lost=on_lost)
+        sched_stats = None
+        if args.concurrency > 1:
+            # N concurrent decode streams page the same prompt blocks
+            # through one shared scheduler: their requests coalesce into
+            # class-merged ticks and each distinct block decodes once
+            # (lane 0's results are installed into this process' cache).
+            import threading
+
+            from repro.serving import DecodeScheduler
+
+            results: dict = {}
+            errors: list = []
+            with DecodeScheduler(pager,
+                                 batch_window_s=args.batch_window) as sched:
+                def lane(lane_id: int):
+                    futs = [(bid, sched.submit(lane_id, bid))
+                            for bid in block_ids]
+                    for bid, f in futs:
+                        try:
+                            tensors = f.result()
+                            if lane_id == 0:
+                                results[bid] = tensors
+                        except PageLostError as e:
+                            if lane_id != 0:
+                                continue
+                            if on_lost is None:
+                                errors.append(e)
+                            else:
+                                lost.append((bid, e))
+
+                lanes = [threading.Thread(target=lane, args=(i,))
+                         for i in range(args.concurrency)]
+                for th in lanes:
+                    th.start()
+                for th in lanes:
+                    th.join()
+                sched_stats = dict(sched.stats)
+            if errors:
+                raise errors[0]
+            for bid, tensors in results.items():
+                meta = pager.block_meta(bid)
+                span = ((slice(None),) * pager.seq_axis
+                        + (slice(meta["lo"], meta["hi"]),))
+                for name, block in tensors.items():
+                    cache[name] = cache[name].at[span].set(
+                        jnp.asarray(block, cache[name].dtype))
+        else:
+            cache = page_in_blocks_batched(cache, pager, block_ids,
+                                           on_lost=on_lost)
         t_in = time.time() - t0
         lost_ids = {bid for bid, _ in lost}
         paged = set()
@@ -164,6 +229,8 @@ def main(argv=None):
                 np.asarray(cache[name], np.float32) - snapshot[name]))))
         ratio = pager.ratio
         page_stats = dict(pager.stats)
+        if sched_stats is not None:
+            page_stats["scheduler"] = sched_stats
         page_stats["encode_dispatches"] = kv_codec.stats["encode_dispatches"]
         page_stats["encode_fallbacks"] = kv_codec.stats["encode_fallbacks"]
         print(f"[serve] kv offload: {len(block_ids)} blocks x "
@@ -172,6 +239,14 @@ def main(argv=None):
               f"{pager.stats['bytes_compressed']/2**20:.2f} MiB stored, "
               f"ratio {ratio:.2f}x); page-out {t_out:.2f}s, "
               f"page-in {t_in:.2f}s, max err {kv_err:.2e}")
+        if sched_stats is not None:
+            print(f"[serve] kv scheduler: {args.concurrency} streams x "
+                  f"{len(block_ids)} blocks = {sched_stats['requests']} "
+                  f"requests -> {sched_stats['batch_dispatches']} batched "
+                  f"dispatches ({sched_stats['blocks_decoded']} blocks "
+                  f"decoded once; prefix_hits="
+                  f"{sched_stats['prefix_hits']}, coalesced="
+                  f"{sched_stats['coalesced_requests']})")
         if lost:
             print(f"[serve] kv paging DEGRADED: {len(lost)} block(s) lost "
                   f"(pages_lost={pager.stats['pages_lost']}); their token "

@@ -119,3 +119,25 @@ def page_in_blocks(cache: dict, pager: KVPager, block_ids,
                 raise
             on_lost(bid, e)
     return cache
+
+
+def page_in_blocks_batched(cache: dict, pager: KVPager, block_ids,
+                           on_lost=None) -> dict:
+    """Batched ``page_in_blocks``: stage every block, decode them all in ONE
+    class-merged dispatch set (``KVPager.fetch_many``), then install each
+    block at its original token span.
+
+    Same loss semantics as ``page_in_blocks`` -- a lost block either raises
+    ``PageLostError`` or is absorbed by ``on_lost(block_id, exc)`` with its
+    span left zeroed -- but the decode cost is one ``decompress_batch`` over
+    every tensor of every block instead of one dispatch chain per block.
+    """
+    decoded = pager.fetch_many(block_ids, on_lost=on_lost)
+    for bid, tensors in decoded.items():
+        meta = pager.block_meta(bid)
+        span = ((slice(None),) * pager.seq_axis
+                + (slice(meta["lo"], meta["hi"]),))
+        for name, block in tensors.items():
+            cache[name] = cache[name].at[span].set(
+                jnp.asarray(block, cache[name].dtype))
+    return cache

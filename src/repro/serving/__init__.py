@@ -1,0 +1,23 @@
+"""Serving scheduler: continuous batching of decode streams.
+
+The paper keeps one decode saturated; this package keeps the *decoder*
+saturated across many concurrent sessions -- batched page-in dispatches,
+stage/decode double buffering, prefix-aware block sharing, and a bounded
+decoded-block pool.  See docs/serving.md.
+"""
+
+from repro.serving.loadgen import Corpus, build_corpus, run_load
+from repro.serving.prefix_cache import BlockCache
+from repro.serving.scheduler import DecodeScheduler
+from repro.serving.sessions import Session, percentile, summarize_ttft
+
+__all__ = [
+    "BlockCache",
+    "Corpus",
+    "DecodeScheduler",
+    "Session",
+    "build_corpus",
+    "percentile",
+    "run_load",
+    "summarize_ttft",
+]

@@ -189,12 +189,9 @@ class Archive:
     def _plan_for(self, rec: F.ChunkRecord, c, method: str, t_high: int,
                   backend):
         key = (rec.digest, method, t_high)
-        plan = self.cache.get_plan(key)
-        if plan is None:
-            plan = hp.build_plan(c.stream, c.codebook, method=method,
-                                 backend=backend, t_high=t_high)
-            self.cache.put_plan(key, plan)
-        return plan
+        return self.cache.get_or_build_plan(
+            key, lambda: hp.build_plan(c.stream, c.codebook, method=method,
+                                       backend=backend, t_high=t_high))
 
     def _recover(self, name: str, exc, pol, on_error):
         """Apply the recovery policy to one failed chunk.

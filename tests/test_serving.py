@@ -1,0 +1,315 @@
+"""Serving scheduler: concurrency safety, batching, prefix sharing.
+
+Covers the ``repro.serving`` subsystem plus the thread-safety contracts it
+leans on: a ``KVPager``/``Codec``/``PlanCache`` shared by N threads must be
+bit-exact with serial use and keep deterministic dispatch counters
+(single-flight plan builds), the ``BlockCache`` must never evict pinned
+entries, and the ``DecodeScheduler`` must decode each distinct block
+content exactly once no matter how requests interleave.
+"""
+
+import concurrent.futures as futures
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Codec, CodecConfig
+from repro.core.huffman import pipeline as hp
+from repro.serving import (BlockCache, DecodeScheduler, build_corpus,
+                           percentile, run_load, summarize_ttft)
+from repro.serving.loadgen import check_invariants
+from repro.store import KVPager, PageLostError, PlanCache
+
+
+def _codec(eb=1e-3):
+    """A codec with its own plan cache (isolated from the default)."""
+    return Codec(CodecConfig(eb=eb), plan_cache=PlanCache())
+
+
+def _cache(seed=0, s=32):
+    k = jax.random.PRNGKey(seed)
+    base = jnp.cumsum(jax.random.normal(k, (2, 1, s, 2, 8)) * 0.05, axis=2)
+    return {"k": base, "v": base + 0.5}
+
+
+def _offload_blocks(pager, n=4, s_per=8, seed=0):
+    """n blocks with distinct contents; returns their ids."""
+    cache = _cache(seed=seed, s=n * s_per)
+    ids = []
+    for i in range(n):
+        cache, bid = pager.offload(cache, i * s_per, (i + 1) * s_per)
+        ids.append(bid)
+    return ids
+
+
+# ---------------------------------------------------------------------------
+# KVPager thread safety + satellite fixes
+# ---------------------------------------------------------------------------
+
+
+class TestPagerConcurrency:
+    def test_ratio_zero_when_idle(self, tmp_path):
+        assert KVPager(str(tmp_path), codec=_codec()).ratio == 0.0
+
+    def test_drop_unknown_raises_named_error(self, tmp_path):
+        pager = KVPager(str(tmp_path), codec=_codec())
+        with pytest.raises(PageLostError):
+            pager.drop(12345)
+
+    def test_fetch_many_matches_fetch(self, tmp_path):
+        pager = KVPager(str(tmp_path), codec=_codec())
+        ids = _offload_blocks(pager, n=3)
+        serial = {bid: pager.fetch(bid) for bid in ids}
+        batched = pager.fetch_many(ids)
+        assert set(batched) == set(serial)
+        for bid in ids:
+            for name in serial[bid]:
+                assert np.array_equal(np.asarray(batched[bid][name]),
+                                      np.asarray(serial[bid][name]))
+
+    def test_concurrent_fetch_bit_exact_and_counters(self, tmp_path):
+        """N threads through one shared pager+codec: results identical to
+        serial, plans built exactly once per distinct chunk."""
+        pager = KVPager(str(tmp_path), codec=_codec())
+        ids = _offload_blocks(pager, n=4)
+        serial = {bid: {n: np.asarray(a)
+                        for n, a in pager.fetch(bid).items()}
+                  for bid in ids}
+
+        fresh = KVPager(pager.dir, codec=_codec())
+        for bid in ids:
+            fresh.adopt_block(bid, pager.block_meta(bid))
+        be = hp.get_backend(fresh.codec.config.backend)
+        before = dict(be.stats)
+        with futures.ThreadPoolExecutor(8) as ex:
+            got = list(ex.map(
+                lambda bid: (bid, fresh.fetch(bid)), ids * 4))
+        for bid, tensors in got:
+            for name, arr in tensors.items():
+                assert np.array_equal(np.asarray(arr), serial[bid][name])
+        # Single-flight plan building: 2 chunks (k, v) per block, each
+        # distinct payload planned once no matter the thread count.
+        built = be.stats["plan_builds"] - before.get("plan_builds", 0)
+        assert built == 2 * len(ids)
+        assert fresh.stats["pages_in"] == 4 * len(ids)
+
+    def test_concurrent_offload_unique_ids(self, tmp_path):
+        pager = KVPager(str(tmp_path), codec=_codec())
+        out = []
+        lock = threading.Lock()
+
+        def one(seed):
+            cache = _cache(seed=seed, s=8)
+            _, bid = pager.offload(cache, 0, 8)
+            with lock:
+                out.append(bid)
+
+        threads = [threading.Thread(target=one, args=(i,)) for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(set(out)) == 6
+        assert pager.stats["pages_out"] == 6
+
+
+class TestSharedCodecThreads:
+    def test_decompress_threads_bit_exact_with_serial(self):
+        codec = _codec()
+        rng = np.random.default_rng(0)
+        xs = [np.cumsum(rng.normal(size=2048).astype(np.float32))
+              for _ in range(4)]
+        cs = [codec.compress(x) for x in xs]
+        serial = [np.asarray(codec.decompress(c)) for c in cs]
+
+        cold = _codec()
+        be = hp.get_backend(cold.config.backend)
+        before = dict(be.stats)
+        with futures.ThreadPoolExecutor(8) as ex:
+            got = list(ex.map(lambda c: np.asarray(cold.decompress(c)),
+                              cs * 4))
+        for i, arr in enumerate(got):
+            assert np.array_equal(arr, serial[i % len(cs)])
+        # Deterministic counters under contention: one plan build per
+        # distinct stream (single-flight), not per thread.
+        assert (be.stats["plan_builds"]
+                - before.get("plan_builds", 0)) == len(cs)
+
+
+# ---------------------------------------------------------------------------
+# BlockCache
+# ---------------------------------------------------------------------------
+
+
+class TestBlockCache:
+    def test_hit_miss_and_lru_eviction(self):
+        c = BlockCache(capacity_bytes=100)
+        c.insert("a", {"x": 1}, 40, pinned=False)
+        c.insert("b", {"x": 2}, 40, pinned=False)
+        assert c.acquire("a") == {"x": 1}    # refresh a; pins it too
+        c.release("a")
+        c.insert("c", {"x": 3}, 40, pinned=False)   # evicts b (LRU)
+        assert "b" not in c
+        assert "a" in c and "c" in c
+        assert c.stats["evictions"] == 1
+        assert c.acquire("b") is None
+        assert c.stats["misses"] == 1
+
+    def test_pinned_entries_never_evicted(self):
+        c = BlockCache(capacity_bytes=100)
+        c.insert("a", {"x": 1}, 60, pinned=True)     # in flight
+        c.insert("b", {"x": 2}, 60, pinned=False)    # over capacity now
+        assert "a" in c                              # pinned survives
+        assert "b" not in c                          # unpinned LRU paid
+        c.release("a")
+        c.insert("d", {"x": 4}, 60, pinned=False)    # a unpinned -> evictable
+        assert "a" not in c
+
+    def test_admission_reject_oversized(self):
+        c = BlockCache(capacity_bytes=100)
+        assert c.insert("big", {"x": 0}, 101) is False
+        assert "big" not in c
+        assert c.stats["admission_rejects"] == 1
+
+    def test_double_insert_keeps_existing(self):
+        c = BlockCache(capacity_bytes=100)
+        assert c.insert("a", {"x": 1}, 10, pinned=False) is True
+        assert c.insert("a", {"x": 2}, 10, pinned=False) is False
+        assert c.acquire("a") == {"x": 1}
+
+    def test_release_unknown_ignored(self):
+        BlockCache(100).release("ghost")
+
+
+# ---------------------------------------------------------------------------
+# DecodeScheduler
+# ---------------------------------------------------------------------------
+
+
+class TestScheduler:
+    def test_results_bit_exact_with_direct_fetch(self, tmp_path):
+        pager = KVPager(str(tmp_path), codec=_codec())
+        ids = _offload_blocks(pager, n=3)
+        direct = {bid: {n: np.asarray(a)
+                        for n, a in pager.fetch(bid).items()}
+                  for bid in ids}
+        with DecodeScheduler(pager, batch_window_s=0.001) as sched:
+            got = sched.fetch(0, ids)
+        for bid in ids:
+            for name, arr in got[bid].items():
+                assert np.array_equal(np.asarray(arr), direct[bid][name])
+
+    @pytest.mark.parametrize("overlap", [True, False])
+    def test_shared_content_decodes_once(self, tmp_path, overlap):
+        """Same block ids requested by many sessions AND distinct ids with
+        identical bytes: every distinct content decodes exactly once."""
+        pager = KVPager(str(tmp_path), codec=_codec())
+        ids = _offload_blocks(pager, n=2, seed=7)
+        # A twin block: identical content offloaded under a new id.
+        twin_src = KVPager(str(tmp_path) + "_twin", codec=_codec())
+        twin_ids = _offload_blocks(twin_src, n=2, seed=7)
+        twin_map = {}
+        for bid in twin_ids:
+            meta = twin_src.block_meta(bid)
+            new_id = 100 + bid
+            pager.adopt_block(new_id, meta)
+            twin_map[bid] = new_id
+
+        n_sessions = 6
+        with DecodeScheduler(pager, batch_window_s=0.02,
+                             overlap=overlap) as sched:
+            futs = []
+            for sid in range(n_sessions):
+                wanted = ids if sid % 2 == 0 else [twin_map[b]
+                                                  for b in twin_ids]
+                futs += [sched.submit(sid, bid) for bid in wanted]
+            for f in futs:
+                f.result()
+            st = dict(sched.stats)
+        # 2 distinct contents behind 4 block ids and 12 requests.
+        assert st["blocks_decoded"] == 2
+        assert st["requests"] == n_sessions * 2
+        assert st["prefix_hits"] + st["coalesced_requests"] == \
+            n_sessions * 2 - 2
+
+    def test_lost_block_fails_only_its_futures(self, tmp_path):
+        import os
+
+        pager = KVPager(str(tmp_path), codec=_codec())
+        ids = _offload_blocks(pager, n=2)
+        os.unlink(pager.block_meta(ids[0])["path"])
+        with DecodeScheduler(pager, batch_window_s=0.001) as sched:
+            bad = sched.submit(0, ids[0])
+            good = sched.submit(1, ids[1])
+            assert good.result()     # batch-mate unaffected
+            with pytest.raises(PageLostError):
+                bad.result()
+            assert sched.stats["blocks_lost"] == 1
+        assert pager.stats["pages_lost"] == 1
+
+    def test_fairness_cap_defers_large_sessions(self, tmp_path):
+        pager = KVPager(str(tmp_path), codec=_codec())
+        ids = _offload_blocks(pager, n=4)
+        with DecodeScheduler(pager, batch_window_s=0.05,
+                             max_blocks_per_session_per_tick=1) as sched:
+            futs = [sched.submit(0, bid) for bid in ids]
+            futs.append(sched.submit(1, ids[0]))
+            for f in futs:
+                f.result()
+            assert sched.stats["deferred"] >= 1
+            assert sched.stats["ticks"] >= 4
+
+    def test_submit_after_close_raises(self, tmp_path):
+        pager = KVPager(str(tmp_path), codec=_codec())
+        ids = _offload_blocks(pager, n=1)
+        sched = DecodeScheduler(pager, batch_window_s=0.001)
+        sched.close()
+        with pytest.raises(RuntimeError):
+            sched.submit(0, ids[0])
+
+    def test_invalid_knobs_rejected(self, tmp_path):
+        pager = KVPager(str(tmp_path), codec=_codec())
+        with pytest.raises(ValueError):
+            DecodeScheduler(pager, batch_window_s=-1)
+        with pytest.raises(ValueError):
+            DecodeScheduler(pager, max_blocks_per_session_per_tick=0)
+
+
+# ---------------------------------------------------------------------------
+# Sessions / load generator
+# ---------------------------------------------------------------------------
+
+
+class TestSessions:
+    def test_percentile_nearest_rank(self):
+        xs = [10.0, 20.0, 30.0, 40.0, 50.0]
+        assert percentile(xs, 0) == 10.0
+        assert percentile(xs, 100) == 50.0
+        assert percentile(xs, 50) == 30.0
+        with pytest.raises(ValueError):
+            percentile([], 50)
+
+    def test_summarize_empty(self):
+        out = summarize_ttft([])
+        assert out["n"] == 0 and np.isnan(out["p50_ms"])
+
+
+class TestLoadgen:
+    def test_invariants_hold_end_to_end(self, tmp_path):
+        corpus = build_corpus(str(tmp_path), n_sessions=6, prefix_blocks=2,
+                              unique_blocks=1, tokens_per_block=4, seed=0)
+        assert corpus.n_distinct_blocks == 2 + 6
+        assert corpus.n_block_requests == 6 * 3
+        base = run_load(corpus, mode="baseline", rate_per_s=2000.0, seed=0)
+        schd = run_load(corpus, mode="scheduler", rate_per_s=2000.0, seed=0,
+                        batch_window_s=0.005)
+        check_invariants(corpus, base, schd)
+
+    def test_unknown_mode_rejected(self, tmp_path):
+        corpus = build_corpus(str(tmp_path), n_sessions=1, prefix_blocks=1,
+                              unique_blocks=1, tokens_per_block=4, seed=0)
+        with pytest.raises(ValueError):
+            run_load(corpus, mode="warp")

@@ -10,12 +10,13 @@ Three checks, so documentation drift fails the build instead of a reader:
 1. **Relative links** in ``README.md`` and every ``docs/*.md`` must point
    at files that exist (external http(s)/mailto links are not fetched).
 2. **Code pointers** of the form ``path/to/file.py:symbol`` in
-   ``docs/decoder.md`` and ``docs/encoder.md`` must name an existing
-   file under ``src/repro/`` that actually defines the symbol.
-3. **Fenced ```python blocks** in ``docs/api.md``, ``docs/decoder.md``
-   and ``docs/encoder.md`` are executed (each block standalone,
-   ``src/`` on the path), so the examples keep working against the
-   real API.
+   ``docs/decoder.md``, ``docs/encoder.md`` and ``docs/serving.md`` must
+   name an existing file under ``src/repro/`` that actually defines the
+   symbol.
+3. **Fenced ```python blocks** in ``docs/api.md``, ``docs/decoder.md``,
+   ``docs/encoder.md`` and ``docs/serving.md`` are executed (each block
+   standalone, ``src/`` on the path), so the examples keep working
+   against the real API.
 
 Stdlib only; exits non-zero with a list of failures.
 """
@@ -30,8 +31,9 @@ ROOT = Path(__file__).resolve().parent.parent
 SRC = ROOT / "src"
 LINK_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 SNIPPET_FILES = [ROOT / "docs" / "api.md", ROOT / "docs" / "decoder.md",
-                 ROOT / "docs" / "encoder.md"]
-POINTER_FILES = [ROOT / "docs" / "decoder.md", ROOT / "docs" / "encoder.md"]
+                 ROOT / "docs" / "encoder.md", ROOT / "docs" / "serving.md"]
+POINTER_FILES = [ROOT / "docs" / "decoder.md", ROOT / "docs" / "encoder.md",
+                 ROOT / "docs" / "serving.md"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
