@@ -29,8 +29,8 @@ def main() -> None:
                     help="subset of datasets / sizes (CI mode)")
     ap.add_argument("--only", default=None,
                     help="comma list: tableI,tableII,tableIV,tableV,"
-                         "fig2,fig4,batch,store,fused,serving,arch,"
-                         "roofline")
+                         "fig2,fig4,batch,store,fused,serving,sharded,"
+                         "arch,roofline")
     ap.add_argument("--record", default=None, metavar="BENCH_tag.json",
                     help="write rows to a JSON trajectory file")
     ap.add_argument("--compare", default=None, metavar="BENCH_old.json",
@@ -53,7 +53,8 @@ def main() -> None:
                             cr_sensitivity, decode_throughput,
                             decoder_phases, e2e_decompression,
                             encode_throughput, fused_decode, roofline,
-                            serving_load, shmem_tuning, store_throughput)
+                            serving_load, sharded_restore, shmem_tuning,
+                            store_throughput)
 
     suites = [
         ("tableV", decode_throughput.run),
@@ -67,6 +68,7 @@ def main() -> None:
         ("fused", fused_decode.run),
         ("encode", encode_throughput.run),
         ("serving", serving_load.run),
+        ("sharded", sharded_restore.run),
         ("arch", arch_step.run),
         ("roofline", roofline.run),
     ]

@@ -33,14 +33,45 @@ import numpy as np
 from repro.core.codec import Codec, default_codec
 from repro.core.huffman import pipeline as hp
 from repro.core.sz.compressor import Compressed
+from repro.distributed.restore import ShardedRestorer
+from repro.distributed.shards import ShardedWriter
 from repro.store import Archive, ArchiveWriter, StoreError
 
 ARCHIVE_NAME = "archive.szt"
-MANIFEST_VERSION = 2
+#: v2 = single archive per step; v3 adds mesh-sharded entries
+#: (kind "sz-sharded" + shard_manifest.json, docs/distributed.md).
+MANIFEST_VERSION = 3
+_STORE_MANIFEST_VERSION = 2     # first version with .szt-archived sz entries
 
 
 class CheckpointIntegrityError(RuntimeError):
     """A checkpoint entry is missing, truncated, or fails its checksum."""
+
+
+def _entry_spec(fname: str, shape: tuple, mesh):
+    """Partition spec of a flat checkpoint entry under the sharding rules.
+
+    Entry names are dot-joined tree paths ("params.layers.0.attn.wq");
+    the rules in ``runtime/sharding.py`` match "/"-joined substrings, so
+    the path is translated before lookup.  Optimizer entries reuse their
+    parameter's rules the same way ``opt_state_shardings`` does: the
+    leading m/v element and any quantized-leaf suffix are stripped.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.sharding import param_spec
+
+    tname, _, key = fname.partition(".")
+    path = key.replace(".", "/")
+    if tname == "opt":
+        if path.endswith("step"):
+            return P()
+        path = path.split("/", 1)[1] if "/" in path else path
+        for suffix in ("/q", "/scale", "/f"):
+            if path.endswith(suffix):
+                path = path[: -len(suffix)]
+                break
+    return param_spec(path, shape, mesh)
 
 
 def _write_json_atomic(path: str, obj) -> None:
@@ -140,39 +171,72 @@ class CheckpointManager:
 
     # -- write --------------------------------------------------------------
 
-    def save(self, step: int, params, opt_state=None, extra: dict | None = None):
+    def save(self, step: int, params, opt_state=None, extra: dict | None = None,
+             *, mesh=None, shardings=None, opt_shardings=None,
+             shard_count: "int | None" = None):
+        """Save a step.  With ``mesh=`` (or explicit ``shardings=`` /
+        ``opt_shardings=`` pytrees of ``NamedSharding``), compressible
+        entries write the mesh-sharded layout (docs/distributed.md):
+        partitioned by their ``runtime/sharding.py`` specs into
+        ``shard_count`` per-host ``.szt`` shards (default: one per
+        process) that ``restore(mesh=...)`` decodes in parallel, directly
+        into the target shardings."""
         if self._pool is not None:
             self.wait()
             params = jax.tree.map(np.asarray, params)  # snapshot now
             opt_state = jax.tree.map(np.asarray, opt_state) if opt_state else None
             self._pending = self._pool.submit(
-                self._save_sync, step, params, opt_state, extra)
+                self._save_sync, step, params, opt_state, extra, mesh,
+                shardings, opt_shardings, shard_count)
             return
-        self._save_sync(step, params, opt_state, extra)
+        self._save_sync(step, params, opt_state, extra, mesh, shardings,
+                        opt_shardings, shard_count)
 
-    def _save_sync(self, step, params, opt_state, extra):
+    def _save_sync(self, step, params, opt_state, extra, mesh=None,
+                   shardings=None, opt_shardings=None, shard_count=None):
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        manifest = {"version": MANIFEST_VERSION, "step": step,
+        manifest = {"version": _STORE_MANIFEST_VERSION, "step": step,
                     "entries": {}, "extra": extra or {}}
         trees = {"params": params}
         if opt_state is not None:
             trees["opt"] = opt_state
-        writer = None
+        sharded = (mesh is not None or shardings is not None
+                   or opt_shardings is not None) and self.codec is not None
+        spec_trees = {"params": shardings, "opt": opt_shardings}
+        writer = sw = None
         try:
             for tname, tree in trees.items():
                 flat = {key: np.asarray(leaf)
                         for key, leaf in _flatten(tree).items()}
-                if self.codec is not None:
+                flat_specs = (_flatten(spec_trees[tname])
+                              if spec_trees[tname] is not None else None)
+                if self.codec is not None and not sharded:
                     # Tree-level compression: every float32 shard above the
                     # size floor becomes a Compressed leaf in one codec call.
                     flat = self.codec.compress_tree(flat,
                                                     min_size=self.min_size)
                 for key, leaf in flat.items():
                     fname = f"{tname}.{key}"
-                    if isinstance(leaf, Compressed):
+                    if (sharded and isinstance(leaf, np.ndarray)
+                            and leaf.dtype == np.float32
+                            and leaf.size >= self.min_size):
+                        if sw is None:
+                            sw = ShardedWriter(
+                                tmp, mesh, codec=self.codec,
+                                n_shards=shard_count
+                                or max(1, jax.process_count()))
+                        spec = (flat_specs.get(key)
+                                if flat_specs is not None
+                                else _entry_spec(fname, leaf.shape, mesh))
+                        sw.add(fname, leaf, spec)
+                        manifest["entries"][fname] = {
+                            "kind": "sz-sharded",
+                            "shape": [int(s) for s in leaf.shape],
+                            "dtype": str(leaf.dtype)}
+                    elif isinstance(leaf, Compressed):
                         if writer is None:
                             writer = ArchiveWriter(
                                 os.path.join(tmp, ARCHIVE_NAME),
@@ -197,11 +261,17 @@ class CheckpointManager:
         except BaseException:
             if writer is not None:
                 writer.abort()
+            if sw is not None:
+                sw.abort()
             raise
         if writer is not None:
             for fname, crc in writer.checksums().items():
                 manifest["entries"][fname]["checksum"] = crc
             writer.close()
+        if sw is not None:
+            sw.close()
+            manifest["version"] = MANIFEST_VERSION
+            manifest["n_shards"] = sw.n_shards
         _write_json_atomic(os.path.join(tmp, "manifest.json"), manifest)
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)
@@ -254,7 +324,7 @@ class CheckpointManager:
             raise CheckpointIntegrityError(
                 f"step {step}: manifest version {version} is newer than this "
                 f"reader (supports <= {MANIFEST_VERSION})")
-        if version < MANIFEST_VERSION and any(
+        if version < _STORE_MANIFEST_VERSION and any(
                 m["kind"] == "sz" for m in entries.values()):
             raise CheckpointIntegrityError(
                 f"step {step}: checkpoint uses the pre-store manifest "
@@ -323,6 +393,53 @@ class CheckpointManager:
                     f"step {step}: {ARCHIVE_NAME} is corrupt or truncated: "
                     f"{e}") from e
 
+    def _restore_sharded(self, d: str, step: int, manifest, pol,
+                         quarantined: dict, targets: dict) -> dict:
+        """Decode every mesh-sharded entry of a step (per-shard parallel
+        decode, landing in ``targets`` shardings; docs/distributed.md).
+
+        Mirrors ``_restore_archive``'s salvage contract: under a non-raise
+        policy a corrupt/missing shard quarantines only the entries with
+        tiles in it (the reason names the shard file), and a lost shard
+        manifest loses all sharded entries.
+        """
+        entries = {f: m for f, m in manifest["entries"].items()
+                   if m["kind"] == "sz-sharded"}
+        if not entries:
+            return {}
+
+        def lose_all(reason: str) -> dict:
+            if pol.on_error == "raise":
+                raise CheckpointIntegrityError(f"step {step}: {reason}")
+            for fname in entries:
+                quarantined[fname] = reason
+            return {}
+
+        try:
+            restorer = ShardedRestorer(d, codec=self._read_codec)
+        except StoreError as e:
+            return lose_all(f"sharded layout is unreadable: {e}")
+
+        missing = [f for f in entries if f not in restorer.entries]
+        if missing:
+            return lose_all(f"{len(missing)} sharded entries (e.g. "
+                            f"{missing[0]!r}) are missing from the shard "
+                            f"manifest")
+
+        def on_error(name, exc):
+            quarantined[name] = f"{type(exc).__name__}: {exc}"
+
+        try:
+            if pol.on_error == "raise":
+                return restorer.restore(targets, names=list(entries),
+                                        policy="raise")
+            # Salvage: skip failed entries here; restore() substitutes
+            # zeros for quarantined entries under "zero_fill".
+            return restorer.restore(targets, names=list(entries),
+                                    policy="skip", on_error=on_error)
+        except (StoreError, hp.DecodeGuardError) as e:
+            raise CheckpointIntegrityError(f"step {step}: {e}") from e
+
     def _restore_raw(self, d: str, step: int, fname: str, meta):
         path = os.path.join(d, fname + ".npy")
         if not os.path.exists(path):
@@ -350,8 +467,18 @@ class CheckpointManager:
             return None
         return jnp.zeros(tuple(int(s) for s in shape), jnp.dtype(dtype))
 
-    def restore(self, step: int | None = None, policy=None):
+    def restore(self, step: int | None = None, policy=None, *, mesh=None,
+                shardings=None, opt_shardings=None):
         """Restore a step (default: newest).
+
+        ``mesh=`` (or explicit ``shardings=`` / ``opt_shardings=`` pytrees)
+        gives every entry a target ``NamedSharding``: mesh-sharded entries
+        decode per shard in parallel and are assembled *directly* into
+        their target sharding (no gather-then-reshard hop -- the restore
+        mesh need not match the write mesh), and raw/archived entries are
+        placed with ``jax.device_put``.  Without either, every entry
+        restores as a full array on the default device, whatever layout it
+        was written in.
 
         ``policy`` (a string or ``RecoveryPolicy``; default: the codec's
         ``recovery`` config, i.e. ``"raise"``) selects salvage behaviour on
@@ -387,10 +514,24 @@ class CheckpointManager:
         else:
             d = os.path.join(self.dir, f"step_{step:08d}")
             manifest = self._load_manifest(d, step)
+        targets: dict = {}
+        for tname, stree in (("params", shardings), ("opt", opt_shardings)):
+            if stree is not None:
+                for key, s in _flatten(stree).items():
+                    targets[f"{tname}.{key}"] = s
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            for fname, meta in manifest["entries"].items():
+                if fname not in targets and meta.get("shape") is not None:
+                    targets[fname] = NamedSharding(
+                        mesh, _entry_spec(fname, tuple(meta["shape"]), mesh))
+
         trees: dict = {"params": {}, "opt": {}}
         quarantined: dict = {}
         sz_restored = self._restore_archive(d, step, manifest, pol,
                                             quarantined)
+        sharded_restored = self._restore_sharded(d, step, manifest, pol,
+                                                 quarantined, targets)
         for fname, meta in manifest["entries"].items():
             tname, _, key = fname.partition(".")
             if not key:
@@ -399,7 +540,15 @@ class CheckpointManager:
                         f"step {step}: malformed entry name {fname!r}")
                 quarantined[fname] = "malformed entry name"
                 continue
-            if meta["kind"] == "sz":
+            placed = False
+            if meta["kind"] == "sz-sharded":
+                arr = sharded_restored.get(fname)
+                placed = arr is not None  # restorer lands in the sharding
+                if arr is None:          # quarantined by _restore_sharded
+                    arr = self._zero_fill(meta, pol)
+                    if arr is None:
+                        continue
+            elif meta["kind"] == "sz":
                 arr = sz_restored.get(fname)
                 if arr is None:          # quarantined by _restore_archive
                     arr = self._zero_fill(meta, pol)
@@ -415,6 +564,10 @@ class CheckpointManager:
                     arr = self._zero_fill(meta, pol)
                     if arr is None:
                         continue
+            if not placed:
+                tgt = targets.get(fname)
+                if tgt is not None:
+                    arr = jax.device_put(arr, tgt)
             trees.setdefault(tname, {})[key] = arr
         params = _unflatten(trees["params"])
         opt = _unflatten(trees["opt"]) if trees.get("opt") else None

@@ -321,17 +321,36 @@ class Codec:
             lambda leaf: self.compress(leaf) if predicate(leaf) else leaf,
             tree)
 
-    def decompress_tree(self, tree):
+    def decompress_tree(self, tree, *, shardings=None):
         """Inverse of ``compress_tree``: every ``Compressed`` leaf decodes
         through ONE class-batched ``decompress_batch`` call; other leaves
-        pass through untouched."""
+        pass through untouched.
+
+        ``shardings`` (optional) is a pytree matching ``tree`` whose leaves
+        are ``jax.sharding.Sharding`` or ``None``: decoded (and
+        pass-through) leaves with a sharding are placed into it with
+        ``jax.device_put``, so a restored tree lands directly in its target
+        layout instead of on the default device.
+        """
         leaves, treedef = jax.tree_util.tree_flatten(
             tree, is_leaf=lambda x: isinstance(x, Compressed))
+        shard_leaves = None
+        if shardings is not None:
+            shard_leaves, sdef = jax.tree_util.tree_flatten(
+                shardings, is_leaf=lambda x: x is None or
+                isinstance(x, jax.sharding.Sharding))
+            if len(shard_leaves) != len(leaves):
+                raise ValueError(
+                    f"shardings tree has {len(shard_leaves)} leaves but the "
+                    f"compressed tree has {len(leaves)}")
         idx = [i for i, leaf in enumerate(leaves)
                if isinstance(leaf, Compressed)]
         outs = self.decompress_batch([leaves[i] for i in idx])
         for i, out in zip(idx, outs):
             leaves[i] = out
+        if shard_leaves is not None:
+            leaves = [jax.device_put(leaf, s) if s is not None else leaf
+                      for leaf, s in zip(leaves, shard_leaves)]
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -1,0 +1,21 @@
+"""Distributed restore: mesh-sharded archives, per-device decode.
+
+See ``docs/distributed.md``.  ``ShardedWriter`` partitions tensors by
+their partition specs into per-host ``.szt`` shard archives plus a JSON
+manifest; ``ShardedRestorer`` decodes the shards concurrently and lands
+every entry directly in a target ``NamedSharding`` -- the layout is
+host-count-agnostic, so any write topology restores at any read topology.
+"""
+
+from repro.distributed.partition import (axis_sizes_of, extract_slice,
+                                         spec_parts, tile_extents,
+                                         tile_slice)
+from repro.distributed.restore import ShardedRestorer
+from repro.distributed.shards import (ShardedWriter, ShardManifestError,
+                                      chunk_name, load_manifest)
+
+__all__ = [
+    "ShardedWriter", "ShardedRestorer", "ShardManifestError",
+    "axis_sizes_of", "spec_parts", "tile_extents", "tile_slice",
+    "extract_slice", "chunk_name", "load_manifest",
+]

@@ -1,0 +1,237 @@
+"""``ShardedRestorer``: decode a mesh-sharded archive into target shardings.
+
+Restore runs each shard's stage->decode pipeline concurrently (one worker
+per shard, each an ordinary ``store.Archive`` whose ``iter_decode`` already
+double-buffers disk reads against class-merged decode), then lands every
+entry *directly* in its target ``NamedSharding``: each target device's
+slice is assembled host-side from the decoded tiles that overlap it and
+placed with ``jax.device_put``, and the global array is constructed with
+``jax.make_array_from_single_device_arrays`` -- the unsharded tensor is
+never materialized when a sharding is given.  When the restore topology
+matches the write grid, every device slice is exactly one tile and the
+assembly is copy-free.
+
+All shard archives share the restorer's codec, so its digest-keyed plan
+cache deduplicates phase 1-3 plans across shards (identical tiles -- e.g.
+zero-initialized layers -- build one plan total), and a re-restore builds
+zero plans.
+
+Failure containment follows docs/robustness.md: a corrupt or missing
+shard quarantines only the entries with tiles in that shard -- the reason
+names the shard file -- and every other shard restores.  ``policy``
+selects ``"raise"`` / ``"skip"`` / ``"zero_fill"`` semantics per entry.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as futures
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import partition as pt
+from repro.distributed.shards import load_manifest
+from repro.store import format as F
+from repro.store.reader import Archive
+
+
+def _np_dtype(name):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, str(name)))
+
+
+class ShardedRestorer:
+    """One open mesh-sharded archive directory (see ``shards.py``)."""
+
+    def __init__(self, directory: str, *, codec=None):
+        if codec is None:
+            from repro.core.codec import default_codec
+            codec = default_codec()
+        self.dir = directory
+        self.codec = codec
+        self.manifest = load_manifest(directory)
+        self.entries: dict = self.manifest["entries"]
+        self.stats = {"shards_opened": 0, "tiles_decoded": 0,
+                      "entries_quarantined": 0, "io_retries": 0}
+
+    @property
+    def names(self) -> list:
+        return list(self.entries)
+
+    def entry_shape(self, name: str) -> tuple:
+        return tuple(int(s) for s in self.entries[name]["shape"])
+
+    # -- per-shard decode ----------------------------------------------------
+
+    def _read_shard(self, shard: int, chunks: list, validate: bool):
+        """Decode one shard's tile chunks; returns (decoded, failed) maps.
+
+        Failures are collected, never raised, so one bad shard cannot
+        abort its siblings mid-flight; the entry loop applies the policy.
+        """
+        path = os.path.join(self.dir, F.shard_filename(shard))
+        fname = F.shard_filename(shard)
+        if not os.path.exists(path):
+            err = F.StoreCorruptError(
+                f"shard {fname} is missing from {self.dir}")
+            return {}, {c: err for c in chunks}
+        failed: dict = {}
+
+        def on_error(name, exc):
+            failed[name] = F.StoreCorruptError(f"shard {fname}: {exc}")
+
+        try:
+            with Archive(path, codec=self.codec) as ar:
+                decoded = ar.read_all(chunks, policy="skip",
+                                      on_error=on_error, validate=validate,
+                                      as_numpy=True)
+                self.stats["io_retries"] += ar.stats["io_retries"]
+        except F.StoreError as e:
+            err = F.StoreCorruptError(
+                f"shard {fname} is corrupt or truncated: {e}")
+            err.__cause__ = e
+            return {}, {c: err for c in chunks}
+        self.stats["shards_opened"] += 1
+        self.stats["tiles_decoded"] += len(decoded)
+        return decoded, failed
+
+    # -- assembly ------------------------------------------------------------
+
+    def _place(self, name: str, meta: dict, tiles: dict, sharding):
+        """Assemble one entry from its decoded tiles.
+
+        With a sharding: per-device slices only, glued into a global array
+        via ``make_array_from_single_device_arrays`` (asserted to land in
+        the target sharding -- there is no gather-then-reshard hop to get
+        wrong).  Without: the full host array.
+        """
+        shape = self.entry_shape(name)
+        dtype = _np_dtype(meta["dtype"])
+        if sharding is None:
+            full_idx = tuple(slice(0, n) for n in shape)
+            return jnp.asarray(pt.extract_slice(full_idx, tiles, dtype,
+                                                shape))
+        dmap = sharding.addressable_devices_indices_map(shape)
+        locals_ = []
+        for d, idx in dmap.items():
+            sl = tuple(idx)
+            if len(sl) < len(shape):            # jax may elide trailing dims
+                sl += (slice(None),) * (len(shape) - len(sl))
+            locals_.append(jax.device_put(
+                pt.extract_slice(sl, tiles, dtype, shape), d))
+        out = jax.make_array_from_single_device_arrays(shape, sharding,
+                                                       locals_)
+        assert out.sharding.is_equivalent_to(sharding, len(shape)), \
+            f"entry {name!r} did not land in its target sharding"
+        return out
+
+    def _substitute(self, name: str, meta: dict, pol, sharding):
+        """Zeros in the target sharding for a quarantined entry, or None."""
+        if pol.on_error != "zero_fill":
+            return None
+        shape = self.entry_shape(name)
+        zeros = jnp.zeros(shape, jnp.dtype(meta["dtype"]))
+        return zeros if sharding is None else jax.device_put(zeros, sharding)
+
+    # -- public --------------------------------------------------------------
+
+    def decode_shards(self, shards, *, devices=None,
+                      validate: bool = True) -> dict:
+        """Decode the tile chunks of ``shards`` -- one host's local share.
+
+        This is the per-host critical path of a multi-host restore: each
+        host decodes only the shard archives its devices own and places
+        the tiles locally (``devices`` round-robins them with
+        ``jax.device_put``); gluing the per-device pieces into global
+        arrays is metadata-only (``make_array_from_single_device_arrays``
+        across processes).  Returns ``{chunk: array}``; any shard failure
+        raises (salvage semantics live in :meth:`restore`).
+        """
+        by_shard: dict[int, list] = {s: [] for s in shards}
+        for meta in self.entries.values():
+            for t in meta["tiles"]:
+                s = int(t["shard"])
+                if s in by_shard:
+                    by_shard[s].append(t["chunk"])
+        out: dict = {}
+        for s, chunks in sorted(by_shard.items()):
+            decoded, failed = self._read_shard(s, chunks, validate)
+            if failed:
+                raise next(iter(failed.values()))
+            out.update(decoded)
+        if devices is not None:
+            devices = list(devices)
+            out = {c: jax.device_put(a, devices[i % len(devices)])
+                   for i, (c, a) in enumerate(out.items())}
+            for a in out.values():
+                a.block_until_ready()
+        return out
+
+    def restore(self, shardings: "dict | None" = None, *, names=None,
+                policy=None, on_error=None, validate: bool = True,
+                concurrency: "int | None" = None) -> dict:
+        """Restore entries into ``{name: array}``.
+
+        ``shardings`` maps entry name -> target ``NamedSharding`` (missing
+        or ``None`` values restore as full host-assembled arrays).  Shards
+        decode concurrently (``concurrency`` workers, default one per
+        shard); ``policy`` / ``on_error`` follow the store's recovery
+        semantics, with quarantine reasons naming the failing shard file.
+        """
+        shardings = shardings or {}
+        pol = self.codec.recovery_policy(policy)
+        names = self.names if names is None else list(names)
+        unknown = [n for n in names if n not in self.entries]
+        if unknown:
+            raise KeyError(f"{self.dir}: no entries named {unknown}")
+
+        by_shard: dict[int, list] = {}
+        chunk_entry: dict[str, str] = {}
+        for name in names:
+            for t in self.entries[name]["tiles"]:
+                by_shard.setdefault(int(t["shard"]), []).append(t["chunk"])
+                chunk_entry[t["chunk"]] = name
+
+        decoded: dict = {}
+        failed: dict = {}
+        workers = min(len(by_shard), concurrency or len(by_shard)) or 1
+        if workers <= 1 or len(by_shard) <= 1:
+            results = [self._read_shard(s, cs, validate)
+                       for s, cs in sorted(by_shard.items())]
+        else:
+            with futures.ThreadPoolExecutor(
+                    workers, thread_name_prefix="szt-shard") as pool:
+                results = list(pool.map(
+                    lambda sc: self._read_shard(sc[0], sc[1], validate),
+                    sorted(by_shard.items())))
+        for dec, fail in results:
+            decoded.update(dec)
+            failed.update(fail)
+
+        out: dict = {}
+        for name in names:
+            meta = self.entries[name]
+            sharding = shardings.get(name)
+            bad = [t for t in meta["tiles"] if t["chunk"] in failed]
+            if bad:
+                exc = failed[bad[0]["chunk"]]
+                if pol.on_error == "raise":
+                    raise exc
+                self.stats["entries_quarantined"] += 1
+                if on_error is not None:
+                    on_error(name, exc)
+                sub = self._substitute(name, meta, pol, sharding)
+                if sub is not None:
+                    out[name] = sub
+                continue
+            tiles = {
+                (tuple(int(o) for o in t["offset"]),
+                 tuple(int(s) for s in t["shape"])): decoded[t["chunk"]]
+                for t in meta["tiles"]}
+            out[name] = self._place(name, meta, tiles, sharding)
+        return out

@@ -41,6 +41,13 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--ckpt-compress-eb", type=float, default=None)
+    ap.add_argument("--ckpt-sharded", action="store_true",
+                    help="write checkpoints in the mesh-sharded layout "
+                         "(docs/distributed.md) and restore directly into "
+                         "the host mesh's shardings")
+    ap.add_argument("--ckpt-shards", type=int, default=None,
+                    help="shard archives per sharded checkpoint "
+                         "(default: one per process)")
     ap.add_argument("--preempt-at", type=int, default=None,
                     help="simulate preemption: exit(17) after this step")
     ap.add_argument("--seed", type=int, default=0)
@@ -59,16 +66,21 @@ def main(argv=None):
         seed=args.seed))
 
     ckpt_codec = None
-    if args.ckpt_compress_eb is not None:
+    if args.ckpt_compress_eb is not None or args.ckpt_sharded:
         from repro.core import Codec, CodecConfig
-        ckpt_codec = Codec(CodecConfig(eb=args.ckpt_compress_eb))
+        # Sharded layout compresses per tile; default eb if none was given.
+        ckpt_codec = Codec(CodecConfig(eb=args.ckpt_compress_eb or 1e-4))
     mgr = (CheckpointManager(args.ckpt_dir, codec=ckpt_codec)
            if args.ckpt_dir else None)
+    ckpt_mesh = None
+    if args.ckpt_sharded:
+        from repro.launch.mesh import make_host_mesh
+        ckpt_mesh = make_host_mesh()
 
     start_step = 0
     params = opt_state = None
     if mgr is not None:
-        restored = mgr.restore()
+        restored = mgr.restore(mesh=ckpt_mesh)
         if restored is not None:
             params = restored["params"]
             opt_state = restored["opt"]
@@ -102,13 +114,15 @@ def main(argv=None):
                   f"gnorm={float(metrics['grad_norm']):.3f} "
                   f"({dt*1000:.0f} ms/step)", flush=True)
         if mgr is not None and (step + 1) % args.ckpt_every == 0:
-            mgr.save(step, params, opt_state)
+            mgr.save(step, params, opt_state, mesh=ckpt_mesh,
+                     shard_count=args.ckpt_shards)
         if args.preempt_at is not None and step == args.preempt_at:
             print(f"[train] simulated preemption at step {step}")
             sys.exit(17)
 
     if mgr is not None:
-        mgr.save(args.steps - 1, params, opt_state)
+        mgr.save(args.steps - 1, params, opt_state, mesh=ckpt_mesh,
+                 shard_count=args.ckpt_shards)
     first, last = losses[0], sum(losses[-5:]) / min(len(losses), 5)
     print(f"[train] done: first loss {first:.4f} -> last(avg5) {last:.4f}")
     return first, last

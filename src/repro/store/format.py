@@ -46,6 +46,20 @@ FORMAT_VERSION = 1
 HEADER_SIZE = 64
 BLOB_ALIGN = 64
 
+# --- sharded layout (repro.distributed) -----------------------------------
+# A mesh-sharded archive is a directory: one JSON manifest mapping entries
+# to per-host tile chunks, plus N ordinary ``.szt`` shard files (each a
+# fully self-describing archive of this format).  The manifest version is
+# independent of FORMAT_VERSION: shard payload bytes never change meaning
+# when the manifest schema evolves.
+SHARD_MANIFEST_NAME = "shard_manifest.json"
+SHARD_MANIFEST_VERSION = 1
+
+
+def shard_filename(shard: int) -> str:
+    """Canonical shard file name inside a sharded-archive directory."""
+    return f"shard_{shard:05d}.szt"
+
 # struct: magic, version, flags, n_chunks, n_codebooks, index_off, index_len,
 # index_crc, then zero padding up to HEADER_SIZE.
 _HEADER_FMT = "<8sIIIIQQI"

@@ -215,7 +215,8 @@ class Archive:
                     DEFAULT_GROUP_CHUNKS, method: "str | None" = None,
                     backend: "str | None" = None, t_high: "int | None" = None,
                     fused: "bool | None" = None, validate: bool = True,
-                    prefetch: bool = True, policy=None, on_error=None):
+                    prefetch: bool = True, policy=None, on_error=None,
+                    as_numpy: bool = False):
         """Yield ``(name, decoded array)`` with I/O overlapped against decode.
 
         Chunks stream in groups of ``group_chunks``: each group decodes as
@@ -238,6 +239,11 @@ class Archive:
         ``OSError`` reads retry with backoff first (``stats["io_retries"]``).
         ``on_error(name, exc)`` is invoked for every failed chunk before
         the policy applies.
+
+        ``as_numpy`` yields host ``np.ndarray`` values instead of device
+        arrays -- the shard-restore path assembles per-device tiles on the
+        host before placing them, so pinning decoded tiles to the default
+        device would be a wasted hop.
         """
         cfg = self.codec.config
         method = cfg.method if method is None else method
@@ -321,13 +327,14 @@ class Archive:
 
                 for name in group:
                     if name in outs:
-                        yield name, jnp.asarray(
+                        out = jnp.asarray(
                             outs[name],
                             jnp.dtype(self.chunk(name).orig_dtype))
+                        yield name, np.asarray(out) if as_numpy else out
                         continue
                     sub = self._recover(name, failed[name], pol, on_error)
                     if sub is not None:
-                        yield name, sub
+                        yield name, np.asarray(sub) if as_numpy else sub
         finally:
             if pool:
                 pool.shutdown(wait=False, cancel_futures=True)

@@ -1,0 +1,390 @@
+"""Distributed restore: partition helpers, sharded archive round trips,
+cross-topology restore, and per-shard salvage (docs/distributed.md).
+
+The multi-device tests force 8 host devices in subprocesses (XLA_FLAGS
+must be set before jax imports); partition/layout logic is pure and runs
+in-process on whatever devices the suite has.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import Codec, CodecConfig
+from repro.distributed import (ShardedRestorer, ShardedWriter,
+                               ShardManifestError, extract_slice,
+                               load_manifest, spec_parts, tile_extents,
+                               tile_slice)
+from repro.launch.mesh import MeshCapacityError, make_host_mesh
+from repro.store import format as F
+
+AX = {"data": 4, "model": 2}
+_SUB_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+
+
+def _codec():
+    return Codec(CodecConfig(eb=1e-3, mode="rel"))
+
+
+def _run_sub(body: str) -> dict:
+    src = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import json
+    """) + textwrap.dedent(body)
+    p = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                       text=True, timeout=900, env=dict(_SUB_ENV))
+    assert p.returncode == 0, p.stderr[-3000:]
+    return json.loads(p.stdout.strip().splitlines()[-1])
+
+
+# ---------------------------------------------------------------------------
+# partition helpers (pure, in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_spec_parts_and_replication_fallback():
+    from jax.sharding import PartitionSpec as P
+    assert spec_parts(P("data", "model"), (8, 6), AX) == (4, 2)
+    # indivisible dims degrade to one part (replicated on that dim)
+    assert spec_parts(P("data", "model"), (7, 6), AX) == (1, 2)
+    assert spec_parts(P(("data", "model"),), (16,), AX) == (8,)
+    assert spec_parts(None, (8, 6), AX) == (1, 1)
+    assert spec_parts(P(None, "model"), (8, 6), AX) == (1, 2)
+    # an axis the mesh does not have is a spec bug, not silent replication
+    with pytest.raises(ValueError, match="not in mesh axes"):
+        spec_parts(P("tp"), (8,), AX)
+
+
+def test_tile_extents_cover_exactly():
+    shape, parts = (8, 6), (4, 2)
+    x = np.arange(48, dtype=np.float32).reshape(shape)
+    seen = np.zeros(shape, dtype=int)
+    tiles = {}
+    for index, offset, tshape in tile_extents(shape, parts):
+        seen[tile_slice(offset, tshape)] += 1
+        tiles[(offset, tshape)] = x[tile_slice(offset, tshape)]
+    assert (seen == 1).all()                       # exact cover, no overlap
+    full = extract_slice(tuple(slice(0, n) for n in shape), tiles,
+                         np.float32, shape)
+    np.testing.assert_array_equal(full, x)
+    # arbitrary cross-tile slice reassembles correctly
+    sl = (slice(1, 7), slice(2, 6))
+    np.testing.assert_array_equal(
+        extract_slice(sl, tiles, np.float32, shape), x[sl])
+    # incomplete coverage is an error, not silent garbage
+    some = dict(list(tiles.items())[:2])
+    with pytest.raises(ValueError, match="cover"):
+        extract_slice(tuple(slice(0, n) for n in shape), some,
+                      np.float32, shape)
+
+
+def test_fit_degrades_to_replication():
+    from repro.runtime.sharding import _fit
+    mesh = SimpleNamespace(shape=AX)
+    assert _fit(mesh, 8, "model") == "model"
+    assert _fit(mesh, 7, "model") is None          # 7 % 2 -> replicate
+    assert _fit(mesh, 16, ("data", "model")) == ("data", "model")
+    assert _fit(mesh, 12, ("data", "model")) is None   # 12 % 8 -> replicate
+    assert _fit(mesh, 8, None) is None
+
+
+# ---------------------------------------------------------------------------
+# sharded archive layout (in-process; layout needs no devices)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_round_trip_and_manifest(tmp_path):
+    from jax.sharding import PartitionSpec as P
+    codec = _codec()
+    rng = np.random.default_rng(0)
+    big = rng.normal(size=(64, 32)).astype(np.float32)
+    rep = rng.normal(size=(16, 8)).astype(np.float32)
+    d = str(tmp_path / "arc")
+    with ShardedWriter(d, AX, codec=codec, n_shards=3) as sw:
+        sw.add("a.big", big, P("data", "model"))
+        sw.add("a.rep", rep)                       # replicated single tile
+        with pytest.raises(F.StoreError, match="duplicate"):
+            sw.add("a.big", big)
+    man = load_manifest(d)
+    assert man["version"] == F.SHARD_MANIFEST_VERSION
+    assert man["n_shards"] == 3
+    assert man["entries"]["a.big"]["parts"] == [4, 2]
+    assert len(man["entries"]["a.big"]["tiles"]) == 8
+    assert len(man["entries"]["a.rep"]["tiles"]) == 1
+    shards = {t["shard"] for t in man["entries"]["a.big"]["tiles"]}
+    assert shards == {0, 1, 2}                     # tiles spread over shards
+
+    r = ShardedRestorer(d, codec=codec)
+    out = r.restore()
+    bound = 1e-3 * (big.max() - big.min()) * 1.0001
+    assert np.abs(np.asarray(out["a.big"]) - big).max() <= bound
+    # repeat restore is bit-exact (deterministic decode)
+    out2 = ShardedRestorer(d, codec=codec).restore()
+    np.testing.assert_array_equal(np.asarray(out["a.big"]),
+                                  np.asarray(out2["a.big"]))
+    np.testing.assert_array_equal(np.asarray(out["a.rep"]),
+                                  np.asarray(out2["a.rep"]))
+
+
+def test_manifest_failure_modes(tmp_path):
+    d = str(tmp_path / "arc")
+    with pytest.raises(ShardManifestError, match="missing"):
+        load_manifest(d)
+    os.makedirs(d)
+    mpath = os.path.join(d, F.SHARD_MANIFEST_NAME)
+    with open(mpath, "w") as f:
+        f.write('{"version": 1, "entr')             # torn half-write
+    with pytest.raises(ShardManifestError, match="torn"):
+        load_manifest(d)
+    with open(mpath, "w") as f:
+        json.dump({"version": F.SHARD_MANIFEST_VERSION + 1,
+                   "entries": {}}, f)
+    with pytest.raises(ShardManifestError, match="newer"):
+        load_manifest(d)
+    with open(mpath, "w") as f:
+        json.dump({"version": 1, "entries": {"x": {"tiles": "nope"}}}, f)
+    with pytest.raises(ShardManifestError, match="invalid"):
+        load_manifest(d)
+
+
+def test_corrupt_shard_quarantines_only_its_entries(tmp_path):
+    from jax.sharding import PartitionSpec as P
+    codec = _codec()
+    rng = np.random.default_rng(1)
+    d = str(tmp_path / "arc")
+    xs = {f"t{i}": rng.normal(size=(32, 16)).astype(np.float32)
+          for i in range(3)}
+    with ShardedWriter(d, {"data": 2}, codec=codec, n_shards=2) as sw:
+        for name, x in xs.items():
+            sw.add(name, x, P("data"))
+    # trash shard 1 wholesale; every entry has one tile in each shard here,
+    # so under "raise" the failure must name the shard file
+    path = os.path.join(d, F.shard_filename(1))
+    sz = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.write(b"\xff" * sz)
+    r = ShardedRestorer(d, codec=codec)
+    with pytest.raises(F.StoreError, match="shard_00001.szt"):
+        r.restore(policy="raise")
+    reasons = {}
+    out = r.restore(policy="skip",
+                    on_error=lambda n, e: reasons.setdefault(n, str(e)))
+    assert out == {}                               # all entries span shard 1
+    assert all("shard_00001.szt" in why for why in reasons.values())
+    # a missing shard file behaves the same, and intact entries survive
+    os.remove(path)
+    with pytest.raises(F.StoreError, match="missing"):
+        r = ShardedRestorer(d, codec=codec)
+        r.restore(policy="raise")
+
+
+def test_missing_shard_spares_other_entries(tmp_path):
+    from jax.sharding import PartitionSpec as P
+    codec = _codec()
+    rng = np.random.default_rng(2)
+    d = str(tmp_path / "arc")
+    a = rng.normal(size=(32, 16)).astype(np.float32)
+    b = rng.normal(size=(32, 16)).astype(np.float32)
+    with ShardedWriter(d, {"data": 2}, codec=codec, n_shards=2) as sw:
+        sw.add("a", a, P("data"))
+        sw.add("b", b)                             # single tile -> shard 0
+    os.remove(os.path.join(d, F.shard_filename(1)))
+    reasons = {}
+    out = ShardedRestorer(d, codec=codec).restore(
+        policy="skip", on_error=lambda n, e: reasons.setdefault(n, str(e)))
+    assert set(reasons) == {"a"} and "shard_00001.szt" in reasons["a"]
+    np.testing.assert_array_equal(  # b lives wholly in shard 0: bit-intact
+        np.asarray(out["b"]),
+        np.asarray(ShardedRestorer(d, codec=codec).restore(names=["b"])["b"]))
+
+
+def test_decompress_tree_shardings():
+    import jax
+    codec = _codec()
+    rng = np.random.default_rng(3)
+    tree = {"w": rng.normal(size=(4096,)).astype(np.float32)}
+    comp = codec.compress_tree(tree, min_size=1024)
+    with pytest.raises(ValueError, match="shardings"):
+        codec.decompress_tree(comp, shardings={"w": None, "x": None})
+    dev = jax.devices()[0]
+    s = jax.sharding.SingleDeviceSharding(dev)
+    out = codec.decompress_tree(comp, shardings={"w": s})
+    assert out["w"].sharding.is_equivalent_to(s, 1)
+
+
+def test_make_host_mesh_capacity_errors():
+    import jax
+    n = len(jax.devices())
+    with pytest.raises(MeshCapacityError, match=">= 1"):
+        make_host_mesh(model=0)
+    with pytest.raises(MeshCapacityError,
+                       match=f"model={n + 1}.*{n} device"):
+        make_host_mesh(model=n + 1)
+    with pytest.raises(MeshCapacityError, match=f"needs {2 * n}"):
+        make_host_mesh(data=2 * n, model=1)
+    mesh = make_host_mesh()
+    assert mesh.shape["data"] == n and mesh.shape["model"] == 1
+
+
+# ---------------------------------------------------------------------------
+# multi-device (forced 8-device subprocesses)
+# ---------------------------------------------------------------------------
+
+
+def test_param_shardings_lay_out_configs_on_8_devices():
+    out = _run_sub("""
+        import jax
+        from repro import configs
+        from repro.models import transformer as T
+        from repro.runtime import sharding as shd
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(4, 2)
+        report = {}
+        for arch in ("deepseek-v3-671b", "qwen2.5-3b"):
+            cfg = configs.get_config(arch).reduced()
+            ps = jax.eval_shape(
+                lambda c=cfg: T.init_model(jax.random.PRNGKey(0), c))
+            shards = shd.param_shardings(ps, mesh)
+            bad = []
+
+            def check(kp, x, s):
+                spec = s.spec
+                for i, ax in enumerate(spec):
+                    if ax is None:
+                        continue
+                    n = 1
+                    for a in (ax if isinstance(ax, tuple) else (ax,)):
+                        n *= mesh.shape[a]
+                    if x.shape[i] % n != 0:
+                        bad.append([str(kp), list(x.shape), str(spec)])
+
+            jax.tree_util.tree_map_with_path(check, ps, shards)
+            n_sharded = sum(
+                any(ax is not None for ax in s.spec)
+                for s in jax.tree.leaves(
+                    shards, is_leaf=lambda x: hasattr(x, "spec")))
+            report[arch] = {"bad": bad[:5], "n_bad": len(bad),
+                            "n_sharded": n_sharded}
+        print(json.dumps(report))
+    """)
+    for arch, rep in out.items():
+        assert rep["n_bad"] == 0, (arch, rep["bad"])
+        assert rep["n_sharded"] > 0, arch          # rules actually fire
+
+
+def test_cross_topology_restore_bit_exact():
+    """Checkpoint written on a (4,2) mesh restores bit-exact on (2,4) and
+    single-device, landing directly in the target shardings."""
+    out = _run_sub("""
+        import numpy as np, jax, tempfile, glob, os
+        from repro.core import Codec, CodecConfig
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.launch.mesh import make_host_mesh
+
+        codec = Codec(CodecConfig(eb=1e-3, mode="rel"))
+        rng = np.random.default_rng(0)
+        params = {
+            "layers": {"0": {
+                "attn": {"wq": rng.normal(size=(256, 512))
+                         .astype(np.float32)},
+                "mlp": {"wg": rng.normal(size=(256, 1024))
+                        .astype(np.float32)}}},
+            "norm": rng.normal(size=(64,)).astype(np.float32)}
+        res = {}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, codec=codec, compress_min_size=4096)
+            mgr.save(1, params, mesh=make_host_mesh(4, 2), shard_count=4)
+            sd = os.path.join(d, "step_00000001")
+            res["shard_files"] = len(
+                glob.glob(os.path.join(sd, "shard_*.szt")))
+
+            o24 = mgr.restore(1, mesh=make_host_mesh(2, 4))
+            wq = o24["params"]["layers"]["0"]["attn"]["wq"]
+            res["addressable"] = len(wq.addressable_shards)
+            res["local_shape"] = list(wq.addressable_shards[0].data.shape)
+            res["n_dev"] = len(wq.sharding.device_set)
+
+            o1 = mgr.restore(1)                    # single-device assembly
+            res["bit_exact_24_vs_1"] = bool(np.array_equal(
+                np.asarray(wq),
+                np.asarray(o1["params"]["layers"]["0"]["attn"]["wq"])))
+            res["norm_exact"] = bool(np.array_equal(
+                np.asarray(o24["params"]["norm"]),
+                np.asarray(o1["params"]["norm"])))
+            mx = float(np.abs(np.asarray(o1["params"]["layers"]["0"]
+                       ["attn"]["wq"]) - params["layers"]["0"]["attn"]
+                       ["wq"]).max())
+            rg = params["layers"]["0"]["attn"]["wq"]
+            res["within_eb"] = mx <= 1e-3 * float(rg.max() - rg.min()) * 1.01
+        print(json.dumps(res))
+    """)
+    assert out["shard_files"] == 4
+    assert out["addressable"] == 8 and out["n_dev"] == 8
+    assert out["local_shape"] == [128, 128]        # (2,4) mesh slice, no
+    assert out["bit_exact_24_vs_1"]                # device-0 gather
+    assert out["norm_exact"]
+    assert out["within_eb"]
+
+
+def test_corrupted_shard_salvage_on_8_devices():
+    out = _run_sub("""
+        import numpy as np, jax, tempfile, os
+        from repro.core import Codec, CodecConfig
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.launch.mesh import make_host_mesh
+
+        codec = Codec(CodecConfig(eb=1e-3, mode="rel"))
+        rng = np.random.default_rng(0)
+        params = {
+            "wq": rng.normal(size=(256, 512)).astype(np.float32),
+            "wg": rng.normal(size=(256, 1024)).astype(np.float32),
+            "norm": rng.normal(size=(64,)).astype(np.float32)}
+        res = {}
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, codec=codec, compress_min_size=4096)
+            mesh = make_host_mesh(4, 2)
+            mgr.save(1, params, mesh=mesh, shard_count=4)
+            sd = os.path.join(d, "step_00000001")
+            path = os.path.join(sd, "shard_00001.szt")
+            sz = os.path.getsize(path)
+            with open(path, "r+b") as f:
+                f.seek(sz // 2); f.write(b"\\xff" * 4096)
+
+            try:
+                mgr.restore(1, policy="raise", mesh=mesh)
+                res["raise_named"] = False
+            except Exception as e:
+                res["raise_named"] = "shard_00001.szt" in str(e)
+            o = mgr.restore(1, policy="zero_fill", mesh=mesh)
+            res["quarantined"] = sorted(o["quarantined"])
+            res["reasons_name_shard"] = all(
+                "shard_00001.szt" in why
+                for why in o["quarantined"].values())
+            intact = [k.split(".", 1)[1] for k in
+                      ("params.wq", "params.wg", "params.norm")
+                      if k not in o["quarantined"]]
+            res["intact"] = intact
+            res["intact_restored"] = all(
+                np.abs(np.asarray(o["params"][k])).max() > 0
+                for k in intact)
+            res["zero_filled"] = all(
+                float(np.abs(np.asarray(
+                    o["params"][k.split(".", 1)[1]])).max()) == 0.0
+                for k in o["quarantined"])
+        print(json.dumps(res))
+    """)
+    assert out["raise_named"]
+    assert out["quarantined"], "corruption must quarantine something"
+    assert out["reasons_name_shard"]
+    assert out["intact"], "other entries must survive"
+    assert out["intact_restored"]
+    assert out["zero_filled"]

@@ -31,9 +31,11 @@ ROOT = Path(__file__).resolve().parent.parent
 SRC = ROOT / "src"
 LINK_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 SNIPPET_FILES = [ROOT / "docs" / "api.md", ROOT / "docs" / "decoder.md",
-                 ROOT / "docs" / "encoder.md", ROOT / "docs" / "serving.md"]
+                 ROOT / "docs" / "encoder.md", ROOT / "docs" / "serving.md",
+                 ROOT / "docs" / "distributed.md"]
 POINTER_FILES = [ROOT / "docs" / "decoder.md", ROOT / "docs" / "encoder.md",
-                 ROOT / "docs" / "serving.md"]
+                 ROOT / "docs" / "serving.md",
+                 ROOT / "docs" / "distributed.md"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
