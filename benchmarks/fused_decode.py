@@ -21,6 +21,7 @@ bit-exact with two-pass before timing.
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as Cm
@@ -32,6 +33,34 @@ from repro.core.huffman import pipeline as hp
 #: CR variants: relative error bounds spanning low-CR to high-CR regimes.
 EBS = (1e-2, 1e-3, 1e-4)
 
+#: Row count for the 2-D variant: the calibrated 1-D field viewed as a
+#: (512, n/512) grid, exercising the row-carry fused epilogue.
+VARIANT_ROWS = 512
+
+
+def _cell(x, tag: str, eb: float, rows: list):
+    c = Cm.compress_ds(x, eb=eb)
+    qbytes = c.quant_code_bytes
+    two = Codec(CodecConfig(eb=eb, strategy="tile"))
+    fus = Codec(CodecConfig(eb=eb, strategy="tile", fused=True))
+    plan = two.plan_for(c)
+
+    be = hp.get_backend("ref")
+    be.reset_stats()
+    a = two.decompress(c, plan=plan)
+    b = fus.decompress(c, plan=plan)
+    assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), \
+        tag   # fused must be bit-exact before it is timed
+    assert be.stats["fused_fallbacks"] == 0, tag
+
+    t2 = Cm.timeit(lambda: two.decompress(c, plan=plan))
+    tf = Cm.timeit(lambda: fus.decompress(c, plan=plan))
+    rows.append((f"{tag}/twopass", t2 * 1e6,
+                 f"CR={c.ratio:.2f};intermediate_bytes={2 * qbytes}"))
+    rows.append((f"{tag}/fused", tf * 1e6,
+                 f"CR={c.ratio:.2f};intermediate_bytes=0;"
+                 f"cpu_speedup={t2 / tf:.2f}"))
+
 
 def run(n: int = DS.DEFAULT_N, quick: bool = False):
     rows = []
@@ -42,26 +71,17 @@ def run(n: int = DS.DEFAULT_N, quick: bool = False):
     for name in names:
         x, _ = DS.make_dataset(name, n)
         for eb in ebs:
-            c = Cm.compress_ds(x, eb=eb)
-            qbytes = c.quant_code_bytes
-            two = Codec(CodecConfig(eb=eb, strategy="tile"))
-            fus = Codec(CodecConfig(eb=eb, strategy="tile", fused=True))
-            plan = two.plan_for(c)
+            _cell(x, f"fused/{name}/eb{eb:g}", eb, rows)
 
-            be = hp.get_backend("ref")
-            be.reset_stats()
-            a = two.decompress(c, plan=plan)
-            b = fus.decompress(c, plan=plan)
-            assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), \
-                (name, eb)   # fused must be bit-exact before it is timed
-            assert be.stats["fused_fallbacks"] == 0, (name, eb)
-
-            t2 = Cm.timeit(lambda: two.decompress(c, plan=plan))
-            tf = Cm.timeit(lambda: fus.decompress(c, plan=plan))
-            tag = f"fused/{name}/eb{eb:g}"
-            rows.append((f"{tag}/twopass", t2 * 1e6,
-                         f"CR={c.ratio:.2f};intermediate_bytes={2 * qbytes}"))
-            rows.append((f"{tag}/fused", tf * 1e6,
-                         f"CR={c.ratio:.2f};intermediate_bytes=0;"
-                         f"cpu_speedup={t2 / tf:.2f}"))
+    # N-D / low-precision variants on the first dataset: the same field
+    # viewed as a 2-D grid (row-carry epilogue, per-row cumsum instead of
+    # one long chain) and cast to bfloat16 (f32 epilogue + final cast).
+    # Both are fused-eligible, so fused_fallbacks must stay 0 here too.
+    vx, _ = DS.make_dataset(names[0], n)
+    x2d = np.asarray(vx)[:(len(vx) // VARIANT_ROWS) * VARIANT_ROWS]
+    x2d = x2d.reshape(VARIANT_ROWS, -1)
+    xbf = jnp.asarray(vx).astype(jnp.bfloat16)
+    for eb in ebs:
+        _cell(x2d, f"fused/{names[0]}-2d/eb{eb:g}", eb, rows)
+        _cell(xbf, f"fused/{names[0]}-bf16/eb{eb:g}", eb, rows)
     return rows

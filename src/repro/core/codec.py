@@ -86,13 +86,18 @@ class CodecConfig:
       t_high           highest non-overflow CR class of the tuner
       tile_syms        tile size for the fixed-"tile" strategy
       fused            decode→dequantize→reconstruct in ONE dispatch: phase
-                       4 emits reconstructed floats directly, never writing
+                       4 emits reconstructed values directly, never writing
                        the uint16 quant-code array to HBM.  Bit-exact with
-                       the two-pass path.  Requests the fused path; decodes
-                       it cannot serve (N-D tensors, non-float32 dtypes,
-                       the "tuned" strategy, "naive_ref", or a backend
-                       without fused ops) automatically fall back to
-                       two-pass and count ``stats["fused_fallbacks"]``.
+                       the two-pass path.  Serves 1-D/2-D/3-D tensors
+                       (unit axes squeezed) in float32 / bfloat16 / float16
+                       (``compressor.FUSED_DTYPES``; low-precision outputs
+                       compute in f32 with one final cast).  Decodes it
+                       cannot serve (>3-D tensors, other dtypes, rows over
+                       ``compressor.FUSED_MAX_COLS``, 3-D planes over
+                       ``compressor.FUSED_MAX_PLANE``, the "tuned"
+                       strategy, "naive_ref", or a backend without fused
+                       ops) automatically fall back to two-pass and count
+                       ``stats["fused_fallbacks"]`` once per tensor.
 
     Session side:
       plan_cache_size  LRU bound of the Codec's digest-keyed plan cache
@@ -286,6 +291,7 @@ class Codec:
             plans = [self.plan_for(x) for x in cs]
         return compressor.decompress_batch(cs, method=c.method,
                                            backend=self.backend,
+                                           strategy=c.strategy,
                                            t_high=c.t_high, plans=plans,
                                            fused=c.fused)
 
@@ -309,14 +315,17 @@ class Codec:
         """Compress every compressible leaf of a pytree, in place of it.
 
         A leaf is compressed when ``predicate(leaf)`` is true (default:
-        float32 with at least ``min_size`` elements); everything else
-        passes through untouched, so checkpoint shards and KV blocks can
-        hand whole trees over instead of hand-rolling dict loops.
+        float32 / bfloat16 / float16 -- the dtypes checkpoints and KV
+        caches actually hold, ``compressor.FUSED_DTYPES`` -- with at least
+        ``min_size`` elements); everything else passes through untouched,
+        so checkpoint shards and KV blocks can hand whole trees over
+        instead of hand-rolling dict loops.
         """
         if predicate is None:
             def predicate(leaf):
                 arr = np.asarray(leaf)
-                return arr.dtype == np.float32 and arr.size >= min_size
+                return (arr.dtype.name in compressor.FUSED_DTYPES
+                        and arr.size >= min_size)
         return jax.tree.map(
             lambda leaf: self.compress(leaf) if predicate(leaf) else leaf,
             tree)

@@ -172,16 +172,26 @@ class OutputTransform:
     The transform is ``x = 2*eb * cumsum(code - radius)`` with the outlier
     side list (``outlier_pos`` int32[m_pad] flat positions, -1 padded;
     ``outlier_val`` the exact residuals) scattered in before the prefix sum
-    -- exactly ``core.sz.lorenzo.dequantize`` for a flat (1-D Lorenzo)
-    tensor.  Backends that register fused phase-4 ops apply it inside the
-    decode-write dispatch, so the uint16 quant-code array is never
-    materialized in HBM between decode and reconstruction.
+    -- exactly ``core.sz.lorenzo.dequantize``.  Backends that register
+    fused phase-4 ops apply it inside the decode-write dispatch, so the
+    uint16 quant-code array is never materialized in HBM between decode and
+    reconstruction.
+
+    ``shape`` selects the reconstruction geometry: ``None`` (or any shape
+    with at most one non-unit axis) runs the 1-D chained-carry epilogue,
+    2-D/3-D shapes run the row/plane-carry epilogue (cumsum along every
+    axis).  ``out_dtype`` is the reconstruction output dtype; the epilogue
+    computes in f32 and casts once at the end, matching
+    ``lorenzo.dequantize`` bit-for-bit for bf16/f16.  Both default to the
+    historical 1-D float32 behavior.
     """
 
     eb: float
     radius: int
     outlier_pos: Any
     outlier_val: Any
+    shape: Any = None
+    out_dtype: Any = None
 
 
 @dataclasses.dataclass
@@ -200,10 +210,12 @@ class DecodeBackend:
     Optional fused phase-4 ops (decode + dequantize + reconstruct in one
     dispatch; see :class:`OutputTransform`):
 
-    ``fused_tiles_fn``   tiles_fn signature + (opos, oval, eb, radius)
-                         -> reconstructed float32[n_out]
-    ``fused_padded_fn``  padded_fn signature + (opos, oval, eb, radius)
-                         -> reconstructed float32[n_out]
+    ``fused_tiles_fn``   tiles_fn signature + (opos, oval, eb, radius,
+                         shape=, out_dtype=) -> reconstructed
+                         ``out_dtype[n_out]`` (flat, C-order)
+    ``fused_padded_fn``  padded_fn signature + (opos, oval, eb, radius,
+                         shape=, out_dtype=) -> reconstructed
+                         ``out_dtype[n_out]`` (flat, C-order)
 
     A backend registered without them still works everywhere; fused
     requests fall back to the two-pass path and the fallback is recorded
@@ -322,31 +334,40 @@ def _make_ref_backend() -> DecodeBackend:
                                  total_bits, max_len, n_out)
         return out
 
-    def _epilogue(codes, n_out, opos, oval, eb, radius):
+    def _epilogue(codes, n_out, opos, oval, eb, radius, shape, out_dtype):
         # Lazy import: core.sz -> compressor -> pipeline at package import
         # time, so pipeline cannot import core.sz at its own top level.
         from repro.core.sz import lorenzo
 
-        return lorenzo.dequantize(codes, jnp.asarray(opos, jnp.int32),
-                                  jnp.asarray(oval, jnp.int32), eb, (n_out,),
-                                  radius=radius)
+        shape = tuple(shape) if shape is not None else (n_out,)
+        dtype = jnp.dtype(out_dtype) if out_dtype is not None else jnp.float32
+        out = lorenzo.dequantize(codes.reshape(shape),
+                                 jnp.asarray(opos, jnp.int32),
+                                 jnp.asarray(oval, jnp.int32), eb, shape,
+                                 radius=radius, dtype=dtype)
+        return out.reshape(-1)
 
     # The ref backend composes the existing jnp paths (decode, then the
-    # exact dequantize/reconstruct the two-pass path uses), so fused-vs-
-    # two-pass parity is testable on every platform by construction.
+    # exact N-D dequantize/reconstruct the two-pass path uses), so fused-
+    # vs-two-pass parity is testable on every platform by construction:
+    # these are the jnp mirrors of ``kernels/fused_decode.py`` for every
+    # supported ndim/dtype.
     def fused_tiles(units, ds, dl, starts, ends, offsets, total_bits,
                     max_len, n_out, tile_syms, ss_max, opos, oval, eb,
-                    radius, **kwargs):
+                    radius, shape=None, out_dtype=None, **kwargs):
         codes = hd.decode_write_tiles(jnp.asarray(units), ds, dl, starts,
                                       ends, offsets, total_bits, max_len,
                                       n_out, tile_syms, ss_max, **kwargs)
-        return _epilogue(codes, n_out, opos, oval, eb, radius)
+        return _epilogue(codes, n_out, opos, oval, eb, radius, shape,
+                         out_dtype)
 
     def fused_padded(units, ds, dl, start_abs, end_abs, total_bits, max_len,
-                     n_out, opos, oval, eb, radius):
+                     n_out, opos, oval, eb, radius, shape=None,
+                     out_dtype=None):
         codes = padded(units, ds, dl, start_abs, end_abs, total_bits,
                        max_len, n_out)
-        return _epilogue(codes, n_out, opos, oval, eb, radius)
+        return _epilogue(codes, n_out, opos, oval, eb, radius, shape,
+                         out_dtype)
 
     return DecodeBackend(name="ref", count_fn=count, sync_fn=sync,
                          tiles_fn=hd.decode_write_tiles, padded_fn=padded,
@@ -933,17 +954,20 @@ def decode(stream: EncodedStream, codebook, n_out: int, *,
                  the backend's FUSED ops: the decoded symbols are carried
                  through dequantization and the inverse-Lorenzo prefix sum
                  inside the decode-write dispatch and the return value is
-                 the reconstructed float32 array (the uint16 quant-code
-                 array is never materialized).  Supported for the "tile"
-                 and "padded" strategies on backends registered with fused
-                 ops; the "tuned" strategy gathers sequences by CR class,
-                 which reorders the output and breaks the sequential
-                 reconstruction carry, so it raises ``ValueError`` (callers
-                 such as ``sz.compressor.decompress`` fall back to the
-                 two-pass path and count ``stats["fused_fallbacks"]``).
+                 the reconstructed array, flat in C-order (the uint16
+                 quant-code array is never materialized).  The transform's
+                 ``shape`` picks the 1-D/2-D/3-D reconstruction and
+                 ``out_dtype`` the output precision (f32 compute, one final
+                 cast).  Supported for the "tile" and "padded" strategies
+                 on backends registered with fused ops; the "tuned"
+                 strategy gathers sequences by CR class, which reorders the
+                 output and breaks the sequential reconstruction carry, so
+                 it raises ``ValueError`` (callers such as
+                 ``sz.compressor.decompress`` fall back to the two-pass
+                 path and count ``stats["fused_fallbacks"]``).
 
-    Returns uint16[n_out] quant codes, or float32[n_out] when ``transform``
-    is attached.
+    Returns uint16[n_out] quant codes, or reconstructed ``out_dtype[n_out]``
+    when ``transform`` is attached.
     """
     be = get_backend(backend)
     luts = _as_luts(codebook)
@@ -958,17 +982,21 @@ def decode(stream: EncodedStream, codebook, n_out: int, *,
                 f"backend {be.name!r} registers no fused ops; check "
                 f"backend.supports_fused before attaching a transform")
         t = transform
+        t_shape = tuple(t.shape) if t.shape is not None else None
+        t_dtype = (jnp.dtype(t.out_dtype) if t.out_dtype is not None
+                   else jnp.float32)
         if strategy == "padded":
             return be.decode_padded_fused(
                 units, luts.dec_sym, luts.dec_len, plan.start_bits,
                 plan.end_bits, stream.total_bits, luts.max_len, n_out,
-                t.outlier_pos, t.outlier_val, t.eb, t.radius)
+                t.outlier_pos, t.outlier_val, t.eb, t.radius,
+                shape=t_shape, out_dtype=t_dtype)
         ss_max = ss_max_for_tile(tile_syms, luts.max_len)
         return be.decode_tiles_fused(
             units, luts.dec_sym, luts.dec_len, plan.start_bits,
             plan.end_bits, plan.offsets, stream.total_bits, luts.max_len,
             n_out, tile_syms, ss_max, t.outlier_pos, t.outlier_val, t.eb,
-            t.radius)
+            t.radius, shape=t_shape, out_dtype=t_dtype)
     if transform is not None and strategy in VALID_STRATEGIES:
         raise ValueError(
             f"fused decode (transform=) supports strategies 'tile' and "

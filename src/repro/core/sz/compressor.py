@@ -69,12 +69,20 @@ class Compressed:
 
     @property
     def eb_effective(self) -> float:
-        """Guaranteed bound: eb + final-cast rounding (ulp/2 of max |x|).
+        """Guaranteed bound: eb + reconstruction rounding.
 
-        The lattice value q is exact (float64 host prequantization); the only
-        further rounding is the f32 product ``q * 2*eb`` at reconstruction.
+        The lattice value q is exact (float64 host prequantization); the
+        further rounding is the f32 product ``q * 2*eb`` at reconstruction
+        (one f32 ulp at max |x|), plus -- for low-precision outputs
+        (bf16/f16) -- the single final cast of that product to the output
+        dtype (half an output-dtype ulp at max |x'|).
         """
-        return self.eb + float(np.spacing(np.float32(self.max_abs + self.eb)))
+        bound = self.eb + float(np.spacing(np.float32(self.max_abs + self.eb)))
+        dt = np.dtype(self.dtype)
+        if dt.itemsize < 4:     # bf16/f16: one final-cast rounding step
+            # jnp.finfo resolves ml_dtypes (bfloat16) where np.finfo cannot.
+            bound += 0.5 * float(jnp.finfo(dt).eps) * (self.max_abs + bound)
+        return bound
 
 
 def _outlier_m_pad(n_out: int) -> int:
@@ -213,18 +221,32 @@ def _dequantize(c: Compressed, codes: jnp.ndarray) -> jnp.ndarray:
 def _fused_transform(c: Compressed) -> hp.OutputTransform:
     return hp.OutputTransform(eb=c.eb, radius=c.radius,
                               outlier_pos=c.outlier_pos,
-                              outlier_val=c.outlier_val)
+                              outlier_val=c.outlier_val,
+                              shape=tuple(c.shape),
+                              out_dtype=jnp.dtype(str(np.dtype(c.dtype))))
+
+
+#: Output dtypes the fused epilogue serves (f32 compute, one final cast).
+FUSED_DTYPES = ("float32", "bfloat16", "float16")
+#: Widest fastest axis the row-tiled N-D epilogue provisions for (one tile
+#: must hold at least one whole row in VMEM).
+FUSED_MAX_COLS = 1 << 15
+#: Largest 3-D plane (rows * cols) the VMEM plane-carry scratch can hold.
+FUSED_MAX_PLANE = 1 << 20
 
 
 def fused_unsupported_reason(c: Compressed, backend, method: str,
                              strategy: str) -> "str | None":
     """Why the fused decode path cannot serve this tensor (None = it can).
 
-    The fused epilogue is the flat 1-D inverse Lorenzo, so it covers
-    tensors with at most one non-unit axis; N-D tensors, non-float32
-    dtypes, the sequential oracle method, the class-gathering "tuned"
-    strategy, and backends registered without fused ops all fall back to
-    the two-pass path (recorded in ``stats["fused_fallbacks"]``).
+    The fused epilogue covers 1-D/2-D/3-D inverse Lorenzo (unit axes are
+    squeezed first -- ``kernels/ops.py:fused_squeeze``) over float32,
+    bfloat16 and float16 outputs (``FUSED_DTYPES``).  Still falling back
+    to the two-pass path (recorded in ``stats["fused_fallbacks"]``):
+    >3-D tensors, other dtypes, rows wider than ``FUSED_MAX_COLS``,
+    3-D planes larger than ``FUSED_MAX_PLANE`` (the VMEM plane-carry
+    bound), the sequential oracle method, the class-gathering "tuned"
+    strategy, and backends registered without fused ops.
     """
     be = hp.get_backend(backend)
     if method == "naive_ref":
@@ -234,10 +256,19 @@ def fused_unsupported_reason(c: Compressed, backend, method: str,
                 "breaks the sequential reconstruction carry")
     if not be.supports_fused:
         return f"backend {be.name!r} registers no fused ops"
-    if np.dtype(c.dtype) != np.float32:
-        return f"dtype {np.dtype(c.dtype)} is not float32"
-    if sum(1 for s in c.shape if s != 1) > 1:
-        return "N-D Lorenzo reconstruction (fused epilogue is 1-D)"
+    if np.dtype(c.dtype).name not in FUSED_DTYPES:
+        return (f"dtype {np.dtype(c.dtype)} not in fused set "
+                f"{FUSED_DTYPES}")
+    sq = tuple(s for s in c.shape if s != 1)
+    if len(sq) > 3:
+        return (f"{len(sq)}-D Lorenzo reconstruction (fused epilogue "
+                f"covers up to 3-D)")
+    if len(sq) >= 2 and sq[-1] > FUSED_MAX_COLS:
+        return (f"fastest axis {sq[-1]} exceeds the per-tile row bound "
+                f"{FUSED_MAX_COLS}")
+    if len(sq) == 3 and sq[-2] * sq[-1] > FUSED_MAX_PLANE:
+        return (f"plane {sq[-2]}x{sq[-1]} exceeds the VMEM plane-carry "
+                f"bound {FUSED_MAX_PLANE}")
     return None
 
 
@@ -328,6 +359,7 @@ def decompress_batch(
     method: str = "gap",
     *,
     backend: str = "ref",
+    strategy: str = "tile",
     t_high: int = hp.T_HIGH_DEFAULT,
     plans: "list | None" = None,
     fused: bool = False,
@@ -345,11 +377,13 @@ def decompress_batch(
 
     ``fused=True`` trades dispatch merging for intermediate traffic:
     tensors the fused path can serve (see :func:`fused_unsupported_reason`)
-    decode one-by-one through the fused tile kernel (zero quant-code HBM
-    round trip, but one dispatch chain per tensor); the rest decode through
-    the class-merged two-pass path, each recorded in
-    ``stats["fused_fallbacks"]``.  Output order and bit patterns are
-    unchanged either way.
+    decode one-by-one through the fused kernels under ``strategy`` (zero
+    quant-code HBM round trip, but one dispatch chain per tensor); the
+    rest decode through the class-merged two-pass path.  Eligibility is
+    evaluated exactly ONCE per tensor here -- against the strategy that
+    would actually run -- and every ineligible tensor bumps
+    ``stats["fused_fallbacks"]`` exactly once.  Output order and bit
+    patterns are unchanged either way.
     """
     if not cs:
         return []
@@ -364,11 +398,13 @@ def decompress_batch(
         rest = []
         be = hp.get_backend(backend)
         for i, c in enumerate(cs):
-            if fused_unsupported_reason(c, be, method, "tile") is None:
-                outs[i] = decompress(
-                    c, method=method, backend=be, strategy="tile",
-                    t_high=t_high, plan=plans[i] if plans else None,
-                    fused=True)
+            if fused_unsupported_reason(c, be, method, strategy) is None:
+                out = hp.decode(c.stream, c.codebook, c.n_symbols,
+                                plan=plans[i] if plans else None,
+                                method=method, backend=be,
+                                strategy=strategy, t_high=t_high,
+                                transform=_fused_transform(c))
+                outs[i] = out.reshape(c.shape)
             else:
                 be.bump("fused_fallbacks")
                 rest.append(i)

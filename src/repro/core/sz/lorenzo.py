@@ -115,6 +115,13 @@ def dequantize(codes: jnp.ndarray, outlier_pos: jnp.ndarray,
 
     ``outlier_pos``/``outlier_val`` are flat positions and int32 residuals
     (padded with pos = -1 entries, which are dropped).
+
+    The dequant product runs at ``promote_types(dtype, float32)`` precision
+    with one final cast: float32/float64 outputs are computed natively
+    (unchanged behavior), while low-precision outputs (bfloat16 / float16)
+    are computed as ``q_f32 * 2*eb_f32`` and rounded ONCE at the end.  The
+    fused kernels' epilogue performs the identical f32-multiply-then-cast,
+    which is what keeps fused and two-pass bit-exact for every dtype.
     """
     d = codes.astype(jnp.int32) - radius
     flat = d.reshape(-1)
@@ -123,5 +130,6 @@ def dequantize(codes: jnp.ndarray, outlier_pos: jnp.ndarray,
     flat = flat.at[safe_pos].set(outlier_val.astype(jnp.int32), mode="drop")
     d = flat.reshape(shape)
     q = _lorenzo_reconstruct(d)
-    eb = jnp.asarray(eb, dtype)
-    return (q.astype(dtype) * (2 * eb)).astype(dtype)
+    compute = jnp.promote_types(jnp.dtype(dtype), jnp.float32)
+    eb = jnp.asarray(eb, compute)
+    return (q.astype(compute) * (2 * eb)).astype(dtype)

@@ -10,25 +10,35 @@ inverse-Lorenzo prefix sum (``x = 2·eb · cumsum(d)``) inside the same
 dispatch, emitting float32 output tiles and never writing the code array
 back to HBM.
 
-Two kernels:
+Kernel families:
 
   * ``decode_tiles_fused`` -- ``huffman_decode.decode_tiles_kernel_body``
-    plus the dequantize/reconstruct epilogue.  The grid runs over output
-    tiles; TPU grids execute sequentially, so the Lorenzo carry (the
-    running prefix sum at each tile boundary) lives in a VMEM scratch
-    exactly as in ``lorenzo._recon_kernel``.
+    plus the dequantize/reconstruct epilogue for flat (1-D Lorenzo)
+    output.  The grid runs over output tiles; TPU grids execute
+    sequentially, so the Lorenzo carry (the running prefix sum at each
+    tile boundary) lives in a VMEM scratch exactly as in
+    ``lorenzo._recon_kernel``.
 
-  * ``dequant_reconstruct`` -- the epilogue alone (``lorenzo._recon_kernel``
-    extended with dequantization and the outlier scatter), chained after
-    the padded baseline decoder so every decode-write strategy has a fused
-    form.
+  * ``decode_tiles_fused_nd`` -- the same decode stage with the 2-D/3-D
+    inverse-Lorenzo epilogue.  Tiles are whole rows along the fastest
+    axis (``rows_per_tile`` rows of ``C`` symbols); the 1-D scalar carry
+    generalizes to a ``(C,)`` row carry (the prefix sum over completed
+    rows, reset at each plane boundary) and, for 3-D, an ``(R, C)`` plane
+    carry (the prefix sum over completed planes), both in VMEM scratch.
 
-Bit-exactness: the carry-chained per-tile ``cumsum`` is int32 integer
-arithmetic, identical to the monolithic ``jnp.cumsum`` of
-``core.sz.lorenzo.dequantize``; the single float operation
-(``q_f32 * two_eb``) is the same op in both paths, so fused output is
-bit-identical to two-pass output.  Validated in interpret mode (this
-container is CPU-only); BlockSpecs are written for real VMEM tiling.
+  * ``dequant_reconstruct`` / ``dequant_reconstruct_nd`` -- the epilogue
+    alone (``lorenzo._recon_kernel`` extended with dequantization and the
+    outlier scatter), chained after the padded baseline decoder so every
+    decode-write strategy has a fused form at every supported ndim.
+
+Bit-exactness: the carry-chained per-tile ``cumsum`` chain is int32
+integer arithmetic, identical to the monolithic per-axis ``jnp.cumsum``
+of ``core.sz.lorenzo.dequantize``; the float epilogue computes
+``q_f32 * two_eb`` in float32 and casts ONCE to the output dtype -- the
+same op order ``lorenzo.dequantize`` uses -- so fused output is
+bit-identical to two-pass output for float32 and for bf16/f16.
+Validated in interpret mode (this container is CPU-only); BlockSpecs are
+written for real VMEM tiling.
 """
 
 from __future__ import annotations
@@ -43,29 +53,87 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import common as C
 
 
-def _dequant_recon_block(tile_u16, base, opos, oval, carry, two_eb, *,
-                         radius: int, block: int):
-    """Shared epilogue: one ``block``-symbol tile of codes -> float32.
+def _dequant_block(tile_u16, base, opos, oval, *, radius: int, block: int):
+    """Dequantize one ``block``-symbol tile of codes to int32 residuals.
 
     ``base`` is the tile's global output offset; ``opos``/``oval`` are the
     full (-1-padded) outlier side list, scattered only where a position
-    lands inside this tile; ``carry`` is the VMEM running-prefix scratch.
-    Returns the float32 tile and updates ``carry`` in place.
+    lands inside this tile.
     """
     d = tile_u16.astype(jnp.int32) - radius
     loc = opos - base
     hit = (opos >= 0) & (loc >= 0) & (loc < block)
-    d = d.at[jnp.where(hit, loc, block)].set(
+    return d.at[jnp.where(hit, loc, block)].set(
         jnp.where(hit, oval, 0), mode="drop")
+
+
+def _dequant_recon_block(tile_u16, base, opos, oval, carry, two_eb, *,
+                         radius: int, block: int, out_dtype=jnp.float32):
+    """Shared 1-D epilogue: one ``block``-symbol tile of codes -> floats.
+
+    ``carry`` is the VMEM running-prefix scratch.  The product runs in
+    float32 with one final cast to ``out_dtype`` (see module docstring);
+    returns the reconstructed tile and updates ``carry`` in place.
+    """
+    d = _dequant_block(tile_u16, base, opos, oval, radius=radius,
+                       block=block)
     q = jnp.cumsum(d) + carry[0]
     carry[0] = q[-1]
-    return q.astype(jnp.float32) * two_eb
+    return (q.astype(jnp.float32) * two_eb).astype(out_dtype)
+
+
+def _recon_rows_block(d, t, row_carry, plane_carry, two_eb, *,
+                      rows_per_tile: int, plane_rows: int, cols: int,
+                      planes: int, out_dtype):
+    """Shared N-D epilogue: ``rows_per_tile`` dequantized rows -> floats.
+
+    ``d`` is the int32 residual tile (``rows_per_tile * cols`` flat); ``t``
+    is the grid step.  The inverse Lorenzo is the per-axis cumsum chain:
+    within the tile ``cumsum`` runs along the row (axis -1) and then down
+    the rows (axis -2); across tiles the sequential grid carries
+
+      * ``row_carry``   (cols,) int32 -- the prefix sum over all completed
+        rows of the current plane (``q`` of the previous tile's last row),
+        reset at every plane start;
+      * ``plane_carry`` (plane_rows, cols) int32 -- the prefix sum over
+        completed planes (3-D only; tiles never cross a plane boundary
+        because ``rows_per_tile`` divides ``plane_rows``).
+
+    Trailing fake rows of a final partial tile (2-D) sit strictly after
+    every valid output row; the cumsums are directional and no later tile
+    reads the polluted carry, so the sliced result is exact.
+    """
+    @pl.when(t == 0)
+    def _init():
+        row_carry[...] = jnp.zeros((cols,), jnp.int32)
+        if planes > 1:
+            plane_carry[...] = jnp.zeros((plane_rows, cols), jnp.int32)
+
+    d2 = d.reshape(rows_per_tile, cols)
+    e = jnp.cumsum(d2, axis=1)
+    if planes > 1:
+        r0 = (t * rows_per_tile) % plane_rows
+
+        @pl.when(r0 == 0)
+        def _plane_start():
+            row_carry[...] = jnp.zeros((cols,), jnp.int32)
+
+        f = jnp.cumsum(e, axis=0) + row_carry[...][None, :]
+        row_carry[...] = f[rows_per_tile - 1]
+        q = f + plane_carry[pl.ds(r0, rows_per_tile), :]
+        plane_carry[pl.ds(r0, rows_per_tile), :] = q
+    else:
+        q = jnp.cumsum(e, axis=0) + row_carry[...][None, :]
+        row_carry[...] = q[rows_per_tile - 1]
+    out = (q.astype(jnp.float32) * two_eb).astype(out_dtype)
+    return out.reshape(rows_per_tile * cols)
 
 
 def decode_tiles_fused_kernel_body(rows_ref, start_ref, end_ref, off_ref,
                                    lut_ref, sym_ref, len_ref, opos_ref,
                                    oval_ref, teb_ref, out_ref, carry, *,
-                                   max_len, tile_syms, radius):
+                                   max_len, tile_syms, radius,
+                                   out_dtype=jnp.float32):
     @pl.when(pl.program_id(0) == 0)
     def _init():
         carry[0] = jnp.int32(0)
@@ -76,17 +144,18 @@ def decode_tiles_fused_kernel_body(rows_ref, start_ref, end_ref, off_ref,
     base = pl.program_id(0) * tile_syms
     out_ref[0] = _dequant_recon_block(tile, base, opos_ref[...],
                                       oval_ref[...], carry, teb_ref[0],
-                                      radius=radius, block=tile_syms)
+                                      radius=radius, block=tile_syms,
+                                      out_dtype=out_dtype)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("max_len", "tile_syms", "ss_max", "n_out", "radius",
-                     "interpret"))
+                     "out_dtype", "interpret"))
 def decode_tiles_fused(rows, start_local, end_local, off_local, lut_base,
                        dec_sym, dec_len, opos, oval, two_eb, max_len: int,
                        tile_syms: int, ss_max: int, n_out: int, radius: int,
-                       interpret: bool = True):
+                       out_dtype=jnp.float32, interpret: bool = True):
     """Tile-centric decode+write with the fused dequant/reconstruct epilogue.
 
     First seven inputs are exactly ``huffman_decode.decode_tiles``; the
@@ -94,14 +163,15 @@ def decode_tiles_fused(rows, start_local, end_local, off_local, lut_base,
     int32[m_pad]) and ``two_eb`` (float32[1], the reconstruction scale).
     Output positions past ``n_out`` in the final tile decode as zero codes
     and would corrupt the carry, but no tile follows, so the sliced result
-    is exact.  Returns float32[n_out].
+    is exact.  Returns ``out_dtype[n_out]`` (float32 default; bf16/f16
+    outputs are computed in f32 and cast once).
     """
     n_tiles = rows.shape[0]
     lut = dec_sym.shape[0]
     m = opos.shape[0]
     kernel = functools.partial(decode_tiles_fused_kernel_body,
                                max_len=max_len, tile_syms=tile_syms,
-                               radius=radius)
+                               radius=radius, out_dtype=out_dtype)
     tiles = pl.pallas_call(
         kernel,
         grid=(n_tiles,),
@@ -118,7 +188,7 @@ def decode_tiles_fused(rows, start_local, end_local, off_local, lut_base,
             pl.BlockSpec((1,), lambda t: (0,)),
         ],
         out_specs=pl.BlockSpec((1, tile_syms), lambda t: (t, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_tiles, tile_syms), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, tile_syms), out_dtype),
         scratch_shapes=[pltpu.VMEM((1,), jnp.int32)],
         interpret=interpret,
     )(rows, start_local, end_local, off_local, lut_base, dec_sym, dec_len,
@@ -126,8 +196,89 @@ def decode_tiles_fused(rows, start_local, end_local, off_local, lut_base,
     return tiles.reshape(-1)[:n_out]
 
 
+def decode_tiles_fused_nd_kernel_body(rows_ref, start_ref, end_ref, off_ref,
+                                      lut_ref, sym_ref, len_ref, opos_ref,
+                                      oval_ref, teb_ref, out_ref, row_carry,
+                                      plane_carry, *, max_len, rows_per_tile,
+                                      plane_rows, cols, planes, radius,
+                                      out_dtype):
+    t = pl.program_id(0)
+    block = rows_per_tile * cols
+    tile = C.stage_tile(rows_ref[0], start_ref[0], end_ref[0], off_ref[0],
+                        lut_ref[0], sym_ref[...], len_ref[...], max_len,
+                        block)
+    d = _dequant_block(tile, t * block, opos_ref[...], oval_ref[...],
+                       radius=radius, block=block)
+    out_ref[0] = _recon_rows_block(d, t, row_carry, plane_carry, teb_ref[0],
+                                   rows_per_tile=rows_per_tile,
+                                   plane_rows=plane_rows, cols=cols,
+                                   planes=planes, out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_len", "rows_per_tile", "shape", "ss_max", "radius",
+                     "out_dtype", "interpret"))
+def decode_tiles_fused_nd(rows, start_local, end_local, off_local, lut_base,
+                          dec_sym, dec_len, opos, oval, two_eb, max_len: int,
+                          rows_per_tile: int, shape: tuple, ss_max: int,
+                          radius: int, out_dtype=jnp.float32,
+                          interpret: bool = True):
+    """:func:`decode_tiles_fused` with the 2-D/3-D inverse-Lorenzo epilogue.
+
+    ``shape`` is the squeezed logical shape, ``(R, C)`` or ``(P, R, C)``;
+    each grid step decodes ``rows_per_tile`` whole rows of ``C`` symbols
+    (``rows_per_tile`` must divide ``R`` for 3-D so tiles never cross a
+    plane boundary) and reconstructs them against the VMEM row/plane
+    carries.  Returns ``out_dtype[prod(shape)]`` (flat, C-order).
+    """
+    assert len(shape) in (2, 3), shape
+    planes = shape[0] if len(shape) == 3 else 1
+    plane_rows, cols = shape[-2], shape[-1]
+    if planes > 1:
+        assert plane_rows % rows_per_tile == 0, (shape, rows_per_tile)
+    n_out = 1
+    for s in shape:
+        n_out *= s
+    block = rows_per_tile * cols
+    n_tiles = rows.shape[0]
+    lut = dec_sym.shape[0]
+    m = opos.shape[0]
+    kernel = functools.partial(
+        decode_tiles_fused_nd_kernel_body, max_len=max_len,
+        rows_per_tile=rows_per_tile, plane_rows=plane_rows, cols=cols,
+        planes=planes, radius=radius, out_dtype=out_dtype)
+    # The plane carry is only live for 3-D; 2-D allocates a 1x1 stub so the
+    # kernel arity is static.
+    plane_scratch = pltpu.VMEM(
+        (plane_rows, cols) if planes > 1 else (1, 1), jnp.int32)
+    tiles = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, ss_max, C.ROW_UNITS), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((1, ss_max), lambda t: (t, 0)),
+            pl.BlockSpec((lut,), lambda t: (0,)),
+            pl.BlockSpec((lut,), lambda t: (0,)),
+            pl.BlockSpec((m,), lambda t: (0,)),
+            pl.BlockSpec((m,), lambda t: (0,)),
+            pl.BlockSpec((1,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, block), out_dtype),
+        scratch_shapes=[pltpu.VMEM((cols,), jnp.int32), plane_scratch],
+        interpret=interpret,
+    )(rows, start_local, end_local, off_local, lut_base, dec_sym, dec_len,
+      opos, oval, two_eb)
+    return tiles.reshape(-1)[:n_out]
+
+
 def dequant_recon_kernel_body(codes_ref, opos_ref, oval_ref, teb_ref,
-                              out_ref, carry, *, radius, block):
+                              out_ref, carry, *, radius, block,
+                              out_dtype=jnp.float32):
     @pl.when(pl.program_id(0) == 0)
     def _init():
         carry[0] = jnp.int32(0)
@@ -135,14 +286,16 @@ def dequant_recon_kernel_body(codes_ref, opos_ref, oval_ref, teb_ref,
     base = pl.program_id(0) * block
     out_ref[...] = _dequant_recon_block(codes_ref[...], base, opos_ref[...],
                                         oval_ref[...], carry, teb_ref[0],
-                                        radius=radius, block=block)
+                                        radius=radius, block=block,
+                                        out_dtype=out_dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("radius", "block", "interpret"))
+    jax.jit, static_argnames=("radius", "block", "out_dtype", "interpret"))
 def dequant_reconstruct(codes, opos, oval, two_eb, radius: int,
-                        block: int = 4096, interpret: bool = True):
-    """Standalone fused epilogue: uint16 codes -> reconstructed float32.
+                        block: int = 4096, out_dtype=jnp.float32,
+                        interpret: bool = True):
+    """Standalone fused epilogue: uint16 codes -> reconstructed floats.
 
     ``lorenzo.reconstruct1d`` extended with dequantization (``- radius``)
     and the outlier scatter; chained after the padded baseline decoder.
@@ -153,7 +306,7 @@ def dequant_reconstruct(codes, opos, oval, two_eb, radius: int,
     assert n % block == 0, (n, block)
     m = opos.shape[0]
     kernel = functools.partial(dequant_recon_kernel_body, radius=radius,
-                               block=block)
+                               block=block, out_dtype=out_dtype)
     return pl.pallas_call(
         kernel,
         grid=(n // block,),
@@ -164,7 +317,69 @@ def dequant_reconstruct(codes, opos, oval, two_eb, radius: int,
             pl.BlockSpec((1,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((n,), out_dtype),
         scratch_shapes=[pltpu.VMEM((1,), jnp.int32)],
         interpret=interpret,
     )(codes, opos, oval, two_eb)
+
+
+def dequant_recon_nd_kernel_body(codes_ref, opos_ref, oval_ref, teb_ref,
+                                 out_ref, row_carry, plane_carry, *, radius,
+                                 rows_per_tile, plane_rows, cols, planes,
+                                 out_dtype):
+    t = pl.program_id(0)
+    block = rows_per_tile * cols
+    d = _dequant_block(codes_ref[...], t * block, opos_ref[...],
+                       oval_ref[...], radius=radius, block=block)
+    out_ref[...] = _recon_rows_block(d, t, row_carry, plane_carry,
+                                     teb_ref[0], rows_per_tile=rows_per_tile,
+                                     plane_rows=plane_rows, cols=cols,
+                                     planes=planes, out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("radius", "shape", "rows_per_tile",
+                              "out_dtype", "interpret"))
+def dequant_reconstruct_nd(codes, opos, oval, two_eb, radius: int,
+                           shape: tuple, rows_per_tile: int,
+                           out_dtype=jnp.float32, interpret: bool = True):
+    """:func:`dequant_reconstruct` with the 2-D/3-D epilogue.
+
+    Same row/plane-carry scheme as :func:`decode_tiles_fused_nd`; ``codes``
+    must be padded to a whole number of ``rows_per_tile * shape[-1]``
+    tiles (pad rows sit strictly after the valid output).  Returns
+    ``out_dtype[prod(shape)]`` (flat, C-order).
+    """
+    assert len(shape) in (2, 3), shape
+    planes = shape[0] if len(shape) == 3 else 1
+    plane_rows, cols = shape[-2], shape[-1]
+    if planes > 1:
+        assert plane_rows % rows_per_tile == 0, (shape, rows_per_tile)
+    block = rows_per_tile * cols
+    n = codes.shape[0]
+    assert n % block == 0, (n, block)
+    n_out = 1
+    for s in shape:
+        n_out *= s
+    m = opos.shape[0]
+    kernel = functools.partial(
+        dequant_recon_nd_kernel_body, radius=radius,
+        rows_per_tile=rows_per_tile, plane_rows=plane_rows, cols=cols,
+        planes=planes, out_dtype=out_dtype)
+    plane_scratch = pltpu.VMEM(
+        (plane_rows, cols) if planes > 1 else (1, 1), jnp.int32)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), out_dtype),
+        scratch_shapes=[pltpu.VMEM((cols,), jnp.int32), plane_scratch],
+        interpret=interpret,
+    )(codes, opos, oval, two_eb)
+    return out[:n_out]

@@ -120,52 +120,117 @@ def _two_eb_f32(eb):
     return jnp.asarray(eb, jnp.float32).reshape(1) * 2
 
 
+def fused_squeeze(shape):
+    """Canonical fused-path view of ``shape``: unit axes dropped.
+
+    Cumsum along a unit axis is the identity, so reconstruction over the
+    squeezed shape is bitwise the reconstruction over the full shape.  Both
+    the eligibility check (``compressor.fused_unsupported_reason``) and the
+    kernel dispatch below must agree on this rule.
+    """
+    if shape is None:
+        return None
+    sq = tuple(int(s) for s in shape if s != 1)
+    return sq if len(sq) > 1 else None
+
+
+def fused_tile_rows(shape, tile_syms: int) -> int:
+    """Rows per tile for the N-D fused kernels.
+
+    ~``tile_syms`` symbols per tile, rounded to whole rows; for 3-D the
+    row count must divide the plane height so no tile crosses a plane
+    boundary (the row-carry reset happens between tiles).
+    """
+    plane_rows, cols = shape[-2], shape[-1]
+    w = max(1, tile_syms // cols)
+    w = min(w, plane_rows)
+    if len(shape) == 3:
+        while plane_rows % w:
+            w -= 1
+    return w
+
+
 def decode_write_tiles_fused(units, dec_sym, dec_len, start_bits, end_bits,
                              offsets, total_bits, max_len: int, n_out: int,
                              tile_syms: int, ss_max: int, opos, oval, eb,
-                             radius: int, lut_base=None,
-                             interpret: bool = True):
+                             radius: int, lut_base=None, shape=None,
+                             out_dtype=jnp.float32, interpret: bool = True):
     """Fused phase 4: tile decode + dequantize + inverse-Lorenzo epilogue.
 
     Same tile mapping as :func:`decode_write_tiles`; the kernel carries the
     decoded symbols through ``2*eb*(cumsum(code - radius))`` (outlier side
     list ``opos``/``oval`` scattered in) without materializing the quant-code
-    array.  Returns reconstructed float32[n_out].
+    array.  ``shape`` selects the 2-D/3-D epilogue (row/plane carries in VMEM
+    scratch); unit axes are squeezed first, so e.g. ``(1, n)`` still takes
+    the 1-D chained-carry kernel.  Returns reconstructed ``out_dtype[n_out]``
+    (flat, C-order).
     """
+    sq = fused_squeeze(shape)
+    out_dtype = jnp.dtype(out_dtype)
+    if sq is None:
+        rows, start_local, end_local, off_local, lut_tile = _tile_inputs(
+            units, start_bits, end_bits, offsets, total_bits, n_out,
+            tile_syms, ss_max, lut_base)
+        return _fus.decode_tiles_fused(
+            rows, start_local, end_local, off_local, lut_tile, dec_sym,
+            dec_len, jnp.asarray(opos, jnp.int32),
+            jnp.asarray(oval, jnp.int32), _two_eb_f32(eb), max_len,
+            tile_syms, ss_max, n_out, radius, out_dtype=out_dtype,
+            interpret=interpret)
+    # N-D: re-tile along whole rows of the fastest axis.  The tile size
+    # changes, so the lane budget must be re-derived for the new tile.
+    from repro.core.huffman.pipeline import ss_max_for_tile
+
+    rows_per_tile = fused_tile_rows(sq, tile_syms)
+    block = rows_per_tile * sq[-1]
+    ss_max_nd = ss_max_for_tile(block, max_len)
     rows, start_local, end_local, off_local, lut_tile = _tile_inputs(
-        units, start_bits, end_bits, offsets, total_bits, n_out, tile_syms,
-        ss_max, lut_base)
-    return _fus.decode_tiles_fused(rows, start_local, end_local, off_local,
-                                   lut_tile, dec_sym, dec_len,
-                                   jnp.asarray(opos, jnp.int32),
-                                   jnp.asarray(oval, jnp.int32),
-                                   _two_eb_f32(eb), max_len, tile_syms,
-                                   ss_max, n_out, radius,
-                                   interpret=interpret)
+        units, start_bits, end_bits, offsets, total_bits, n_out, block,
+        ss_max_nd, lut_base)
+    return _fus.decode_tiles_fused_nd(
+        rows, start_local, end_local, off_local, lut_tile, dec_sym, dec_len,
+        jnp.asarray(opos, jnp.int32), jnp.asarray(oval, jnp.int32),
+        _two_eb_f32(eb), max_len, rows_per_tile, sq, ss_max_nd, radius,
+        out_dtype=out_dtype, interpret=interpret)
 
 
 def decode_padded_fused(units, dec_sym, dec_len, start_abs, end_abs,
                         total_bits, max_len: int, n_out: int, opos, oval, eb,
-                        radius: int, interpret: bool = True):
+                        radius: int, shape=None, out_dtype=jnp.float32,
+                        interpret: bool = True):
     """Fused baseline phase 4: padded decode + the standalone epilogue kernel.
 
     The padded layout + compaction keeps the original decoders' scattered-
     write cost structure (that is the point of the baseline); the epilogue
-    (``fused_decode.dequant_reconstruct``) then fuses dequantization and
-    reconstruction into one chained-scan kernel instead of two jnp passes.
+    (``fused_decode.dequant_reconstruct`` / ``dequant_reconstruct_nd``) then
+    fuses dequantization and reconstruction into one chained-scan kernel
+    instead of two jnp passes.
     """
     codes, _ = decode_padded_compact(units, dec_sym, dec_len, start_abs,
                                      end_abs, total_bits, max_len, n_out,
                                      interpret=interpret)
-    block = 4096
+    out_dtype = jnp.dtype(out_dtype)
+    sq = fused_squeeze(shape)
+    if sq is None:
+        block = 4096
+        pad = (-n_out) % block
+        if pad:
+            codes = jnp.concatenate([codes, jnp.zeros(pad, jnp.uint16)])
+        out = _fus.dequant_reconstruct(codes, jnp.asarray(opos, jnp.int32),
+                                       jnp.asarray(oval, jnp.int32),
+                                       _two_eb_f32(eb), radius,
+                                       out_dtype=out_dtype,
+                                       interpret=interpret)
+        return out[:n_out]
+    rows_per_tile = fused_tile_rows(sq, 4096)
+    block = rows_per_tile * sq[-1]
     pad = (-n_out) % block
     if pad:
         codes = jnp.concatenate([codes, jnp.zeros(pad, jnp.uint16)])
-    out = _fus.dequant_reconstruct(codes, jnp.asarray(opos, jnp.int32),
-                                   jnp.asarray(oval, jnp.int32),
-                                   _two_eb_f32(eb), radius,
-                                   interpret=interpret)
-    return out[:n_out]
+    return _fus.dequant_reconstruct_nd(
+        codes, jnp.asarray(opos, jnp.int32), jnp.asarray(oval, jnp.int32),
+        _two_eb_f32(eb), radius, sq, rows_per_tile, out_dtype=out_dtype,
+        interpret=interpret)
 
 
 def decode_padded_compact(units, dec_sym, dec_len, start_abs, end_abs,

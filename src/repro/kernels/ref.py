@@ -7,9 +7,13 @@ codebook skews and assert bit-exact agreement with ``repro.kernels.ops``.
 The fused decode ops (``ops.decode_write_tiles_fused`` /
 ``ops.decode_padded_fused``) have no mirror here: their oracle is the
 decode + ``core.sz.lorenzo.dequantize`` composition that the "ref" decode
-backend registers (``core.huffman.pipeline._make_ref_backend``), asserted
-bit-exact against the kernels by the fused parity matrices in
-``tests/test_pipeline.py`` and ``tests/test_codec.py``.
+backend registers (``core.huffman.pipeline._make_ref_backend``), which is
+N-D and dtype-general by construction (``dequantize`` cumsums along every
+axis and casts once at the end).  It is asserted bit-exact against the
+kernels -- the 1-D chained-carry epilogue and the 2-D/3-D row/plane-carry
+epilogue of ``kernels/fused_decode.py``, over float32 / bfloat16 / float16
+-- by the fused parity matrices in ``tests/test_pipeline.py``,
+``tests/test_codec.py`` and ``tests/test_fused_nd.py``.
 """
 
 from __future__ import annotations

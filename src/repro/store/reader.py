@@ -311,7 +311,8 @@ class Archive:
                 if ok_cs:
                     try:
                         decoded = sz.decompress_batch(
-                            ok_cs, method=method, backend=be, t_high=t_high,
+                            ok_cs, method=method, backend=be,
+                            strategy=cfg.strategy, t_high=t_high,
                             plans=ok_plans, fused=fused)
                         outs = dict(zip(ok_names, decoded))
                     except hp.DecodeGuardError:
@@ -321,7 +322,8 @@ class Archive:
                             try:
                                 outs[n] = sz.decompress(
                                     c, method=method, backend=be,
-                                    t_high=t_high, plan=p, fused=fused)
+                                    strategy=cfg.strategy, t_high=t_high,
+                                    plan=p, fused=fused)
                             except hp.DecodeGuardError as e:
                                 failed[n] = e
 

@@ -185,11 +185,14 @@ class TestFusedCodec:
         assert got.tobytes() == want.tobytes()
 
     def test_nd_tensor_falls_back(self):
+        """2-D/3-D are fused-eligible now; >3 non-unit axes still fall
+        back (the fused epilogue covers up to 3-D Lorenzo)."""
         codec = Codec(CodecConfig(fused=True))
-        c = codec.compress(smooth_field((40, 30), seed=23))
+        c = codec.compress(smooth_field((5, 4, 6, 10), seed=23))
         codec.backend.reset_stats()
         got = np.asarray(codec.decompress(c))
         assert codec.stats["fused_fallbacks"] == 1
+        assert codec.stats["fused_dispatches"] == 0
         want = np.asarray(Codec(CodecConfig()).decompress(c))
         assert got.tobytes() == want.tobytes()
 
@@ -215,18 +218,19 @@ class TestFusedCodec:
             hp._BACKENDS.pop("nofused-test", None)
 
     def test_batch_mixed_eligibility(self):
-        """A fused batch decodes eligible (1-D) tensors through the fused
-        dispatch and the rest through the class-merged two-pass path, in
-        order, bit-exact, one recorded fallback per ineligible tensor."""
+        """A fused batch decodes eligible (1-D/2-D) tensors through the
+        fused dispatch and the rest through the class-merged two-pass path,
+        in order, bit-exact, one recorded fallback per ineligible (here
+        4-D) tensor."""
         codec = Codec(CodecConfig(fused=True))
         cs = [codec.compress(smooth_field((3000,), seed=31)),
-              codec.compress(smooth_field((20, 25), seed=32)),
-              codec.compress(smooth_field((4000,), seed=33)),
-              codec.compress(smooth_field((15, 30), seed=34))]
+              codec.compress(smooth_field((4, 5, 5, 20), seed=32)),
+              codec.compress(smooth_field((20, 25), seed=33)),
+              codec.compress(smooth_field((3, 6, 6, 25), seed=34))]
         codec.backend.reset_stats()
         outs = codec.decompress_batch(cs)
         assert codec.stats["fused_fallbacks"] == 2
-        assert codec.stats["fused_dispatches"] >= 2
+        assert codec.stats["fused_dispatches"] == 2
         refs = Codec(CodecConfig()).decompress_batch(cs)
         for out, ref in zip(outs, refs):
             assert np.asarray(out).tobytes() == np.asarray(ref).tobytes()

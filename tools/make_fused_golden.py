@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Regenerate the fused-decode golden fixture.
+
+    PYTHONPATH=src python tools/make_fused_golden.py
+
+Rewrites ``tests/golden/fused_nd_golden.json``: for each spec, the field is
+generated deterministically (``tests/test_fused_nd.py:_field``), compressed,
+and pinned by two digests -- the compressed payload bytes and the two-pass
+reconstruction bytes (which the fused path must match bit-for-bit;
+asserted here and in ``TestGoldenVectors``).
+
+Only rerun this when an INTENTIONAL format or codec change invalidates the
+fixture; commit the diff together with the change that caused it.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, os.path.join(ROOT, "tests"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.api import Codec  # noqa: E402
+from test_fused_nd import (GOLDEN_PATH, _compressed_digest,  # noqa: E402
+                           _golden_case)
+
+SPECS = [
+    {"shape": [56, 72], "dtype": "f32", "seed": 101, "eb": 1e-4,
+     "mode": "rel", "radius": 128, "tile_syms": 512},
+    {"shape": [6, 24, 40], "dtype": "f32", "seed": 102, "eb": 1e-3,
+     "mode": "abs", "radius": 128, "tile_syms": 512},
+    {"shape": [48, 64], "dtype": "bf16", "seed": 103, "eb": 1e-3,
+     "mode": "rel", "radius": 128, "tile_syms": 512},
+    {"shape": [5, 20, 36], "dtype": "f16", "seed": 104, "eb": 1e-3,
+     "mode": "rel", "radius": 128, "tile_syms": 512},
+]
+
+
+def main() -> int:
+    cases = []
+    for spec in SPECS:
+        _, codec, c = _golden_case(spec)
+        two = np.asarray(codec.decompress(c))
+        fus = np.asarray(Codec(codec.config.replace(fused=True))
+                         .decompress(c))
+        assert fus.tobytes() == two.tobytes(), spec
+        n_outl = int((np.asarray(c.outlier_pos) >= 0).sum())
+        assert n_outl > 0, spec
+        cases.append({
+            "spec": spec,
+            "compressed_sha256": _compressed_digest(c),
+            "reconstruction_sha256":
+                hashlib.sha256(two.tobytes()).hexdigest(),
+            "n_outliers": n_outl,
+            "compressed_bytes": int(c.compressed_bytes),
+        })
+    out = {"format": 1,
+           "note": "regenerate with tools/make_fused_golden.py; any drift "
+                   "in these digests is a cross-version compressed-bytes "
+                   "or reconstruction regression",
+           "cases": cases}
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(cases)} golden cases -> {GOLDEN_PATH}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
